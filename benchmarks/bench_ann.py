@@ -1,0 +1,68 @@
+"""Paper Tab. 10 / Fig. 18 — fixed-point ANN forward times and code sizes on
+the VM, for the paper's layer configurations."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm import REXAVM
+
+# Paper Tab. 10 layer configs.
+CONFIGS = [
+    [2, 3, 1], [4, 3, 2], [4, 6, 2], [4, 8, 2], [4, 8, 4],
+    [4, 8, 8, 2], [4, 8, 8, 4], [4, 8, 8, 8, 4], [4, 32, 2],
+]
+
+
+def ann_program(layers: list[int], seed: int = 0) -> str:
+    """Generate a REXA-Forth ANN (weights embedded in the frame, Ex. 2)."""
+    rng = np.random.default_rng(seed)
+    lines = [f"array input {{ {' '.join(str(int(v)) for v in rng.integers(-500, 500, layers[0]))} }}"]
+    prev = "input"
+    body = []
+    for li in range(1, len(layers)):
+        n_in, n_out = layers[li - 1], layers[li]
+        w = rng.integers(-20, 20, n_in * n_out)
+        b = rng.integers(-10, 10, n_out)
+        s = [-4] * n_out
+        lines.append(f"array w{li} {{ {' '.join(map(str, w))} }}")
+        lines.append(f"array b{li} {{ {' '.join(map(str, b))} }}")
+        lines.append(f"array s{li} {{ {' '.join(map(str, s))} }}")
+        lines.append(f"array a{li} {n_out}")
+        body.append(f"  {prev} w{li} a{li} s{li} vecfold")
+        body.append(f"  a{li} b{li} a{li} 0 vecadd")
+        body.append(f"  a{li} a{li} 0 0 vecmap")
+        prev = f"a{li}"
+    lines.append(": forward")
+    lines += body
+    lines.append(";")
+    lines.append("forward")
+    lines.append(f"{prev} vecmax drop")
+    return "\n".join(lines)
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg = VMConfig(cs_size=16384, steps_per_slice=8192, max_vec=64)
+    rows = []
+    for layers in CONFIGS:
+        neurons = sum(layers[1:])
+        prog = ann_program(layers)
+        vm = REXAVM(cfg, backend="oracle")
+        frame = vm.load(prog)
+        code_cells = frame.end - frame.start
+        # forward time: run the frame, measure steps + wall time
+        t0 = time.perf_counter()
+        res = vm.run(frame, max_slices=200)
+        dt = (time.perf_counter() - t0) * 1e6
+        vm.remove(frame)
+        name = "x".join(map(str, layers))
+        rows.append((
+            f"ann_{name}",
+            dt,
+            f"{neurons} neurons, {code_cells} cells, {res.steps} VM instr, "
+            f"{dt / max(neurons, 1):.0f} us/neuron (CPU oracle)",
+        ))
+    return rows

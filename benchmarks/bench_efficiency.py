@@ -1,0 +1,28 @@
+"""Paper Tab. 1 / Eq. 1 — the efficiency factor
+eps = (C * M) / (A * P), applied to the paper's devices and to the TPU v5e
+target of this framework (with the obvious caveat that eps was designed for
+material-integrated constraints)."""
+
+from __future__ import annotations
+
+# (name, MIPS-or-MFLOPS proxy C, memory KB M, area mm^2 A, power mW P)
+DEVICES = [
+    ("atmel_tiny20", 12, 2.1, 2.1, 4),
+    ("cortex_m0_smartdust", 0.74, 8, 0.1, 70),
+    ("freescale_kl03", 48, 42, 4, 3),
+    ("stm32_f103c", 72, 304, 5, 100),
+    ("stm32_l031", 16, 40, 0.25, 2),          # the paper's node (eps ~1280)
+    ("stm32_l073", 16, 212, 1, 3),
+    ("xilinx_s3_500e", 50, 45, 9.6, 100),
+    ("xilinx_s7_s25", 100, 202, 50, 100),
+    # TPU v5e: C=197e6 MFLOPS-as-MIPS-proxy, M=16 GB, A~300 mm^2, P~200 W.
+    ("tpu_v5e_chip", 197e6, 16e6, 300, 200e3),
+]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for name, c, m, a, p in DEVICES:
+        eps = (c * m) / (a * p)
+        rows.append((f"eps_{name}", 0.0, f"eps = {eps:.3g} (Eq. 1)"))
+    return rows

@@ -1,0 +1,77 @@
+"""Kernel micro-bench: oracle wall-times on CPU + derived TPU roofline
+estimates for the Pallas kernels (no TPU in this container — interpret mode
+validates correctness; numbers here are the jnp-oracle baselines the kernels
+must beat on hardware, plus analytic kernel roofline)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fixmatmul.ref import fixmatmul_ref
+from repro.kernels.flashattn.ref import flash_attention_ref
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.roofline.analysis import HW
+from repro.utils.timing import bench
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    hw = HW()
+
+    # fixmatmul: M=K=N=1024 int8 GEMM
+    M = K = N = 1024
+    xq = jnp.asarray(RNG.integers(-127, 128, (M, K)).astype(np.int8))
+    wq = jnp.asarray(RNG.integers(-127, 128, (K, N)).astype(np.int8))
+    sx = jnp.ones(M, jnp.float32)
+    sw = jnp.ones(N, jnp.float32)
+    f = jax.jit(lambda a, b: fixmatmul_ref(a, b, sx, sw))
+    dt = bench(f, xq, wq)
+    flops = 2 * M * K * N
+    rows.append((
+        "fixmatmul_oracle_1k", dt * 1e6,
+        f"{flops / dt / 1e9:.1f} GFLOP/s CPU oracle; TPU roofline "
+        f"{flops / hw.peak_flops * 1e6:.1f} us (int8 ~2x faster)",
+    ))
+
+    # flash attention: B2 H8 S1024 hd64
+    B, H, S, hd = 2, 8, 1024, 64
+    q = jnp.asarray(RNG.normal(size=(B, H, S, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, H, S, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, H, S, hd)).astype(np.float32))
+    f = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    dt = bench(f, q, k, v)
+    flops = 4 * B * H * S * S * hd
+    rows.append((
+        "flashattn_oracle_1k", dt * 1e6,
+        f"{flops / dt / 1e9:.1f} GFLOP/s CPU oracle (full-block); causal "
+        f"kernel skips ~1/2 the blocks",
+    ))
+
+    # rwkv6 scan: B2 H8 S1024 K64
+    Kh = 64
+    r = jnp.asarray(RNG.normal(size=(B, H, S, Kh)).astype(np.float32)) * 0.3
+    kk = jnp.asarray(RNG.normal(size=(B, H, S, Kh)).astype(np.float32)) * 0.3
+    vv = jnp.asarray(RNG.normal(size=(B, H, S, Kh)).astype(np.float32)) * 0.3
+    lw = -jnp.exp(jnp.asarray(RNG.uniform(-6, -4, (B, H, S, Kh)).astype(np.float32)))
+    u = jnp.zeros((H, Kh), jnp.float32)
+    s0 = jnp.zeros((B, H, Kh, Kh), jnp.float32)
+    f = jax.jit(lambda *a: rwkv6_scan_ref(*a)[0])
+    dt = bench(f, r, kk, vv, lw, u, s0)
+    rows.append(("rwkv6_scan_oracle_1k", dt * 1e6, "chunked oracle, B2xH8xS1024xK64"))
+
+    # lutact vs float sigmoid
+    x = jnp.asarray(RNG.integers(-12000, 12000, (1024, 1024)).astype(np.int32))
+    from repro.kernels.lutact.ref import lut_sigmoid_ref
+    dt = bench(jax.jit(lut_sigmoid_ref), x)
+    xf = x.astype(jnp.float32) / 1000.0
+    dtf = bench(jax.jit(jax.nn.sigmoid), xf)
+    rows.append((
+        "lutact_oracle_1M", dt * 1e6,
+        f"fixed-point {dt*1e6:.0f} us vs float sigmoid {dtf*1e6:.0f} us (1M elems)",
+    ))
+    return rows

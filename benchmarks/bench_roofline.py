@@ -1,0 +1,30 @@
+"""Roofline summary rows from the dry-run artifact (artifacts/dryrun)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACT = Path(__file__).resolve().parent.parent / "artifacts/dryrun/dryrun.json"
+
+
+def run() -> list[tuple[str, float, str]]:
+    if not ARTIFACT.exists():
+        return [("roofline", 0.0, "no dry-run artifact (run repro.launch.dryrun)")]
+    records = json.loads(ARTIFACT.read_text())
+    rows = []
+    for r in records:
+        tag = f"{r['arch']}__{r['shape']}__{r['mesh']}"
+        if r.get("status") != "ok":
+            rows.append((f"roofline_{tag}", 0.0, r.get("status", "?")))
+            continue
+        rf = r["roofline"]
+        dom = rf["bottleneck"].replace("_s", "")
+        rows.append((
+            f"roofline_{tag}",
+            rf[rf["bottleneck"]] * 1e6,
+            f"bottleneck={dom} frac={rf['roofline_fraction']:.4f} "
+            f"compute={rf['compute_s']:.3e}s memory={rf['memory_s']:.3e}s "
+            f"collective={rf['collective_s']:.3e}s",
+        ))
+    return rows

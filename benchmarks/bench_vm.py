@@ -1,0 +1,82 @@
+"""Paper Tab. 9 — VM interpreter throughput (MWPS) and compiler throughput
+(MCPS), for the oracle ("software") and jitted ("hardware") backends plus
+the vmapped Parallel-VM ensemble (paper §3.4)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm import Compiler, EnsembleVM, FrameManager, REXAVM, replicate_state
+from repro.core.vm import vmstate as vms
+
+BENCH_PROG = ": work 0 begin 1+ dup 1000 >= until drop ; work work work work"
+
+
+def mwps(backend: str, steps_budget: int = 200_000) -> float:
+    cfg = VMConfig(cs_size=2048, steps_per_slice=8192)
+    vm = REXAVM(cfg, backend=backend)
+    # Warm up compile path.
+    vm.eval("1 drop", max_slices=4)
+    t0 = time.perf_counter()
+    res = vm.eval(BENCH_PROG, max_slices=steps_budget // 8192 + 50, steps=8192)
+    dt = time.perf_counter() - t0
+    return res.steps / dt / 1e6
+
+
+def mwps_ensemble(n: int = 32) -> tuple[float, float]:
+    """Aggregate MWPS of an n-instance vmapped ensemble (one decode loop,
+    n lock-stepped VMs — the paper's Parallel VM)."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=8192)
+    vm = REXAVM(cfg, backend="oracle")
+    frame = vm.load(BENCH_PROG)
+    vm.launch(frame)
+    ens = EnsembleVM(cfg, n=n)
+    batched = replicate_state(vms.to_device(vm.state), n)
+    batched = ens.run_slice(batched)  # compile
+    t0 = time.perf_counter()
+    iters = 6
+    for _ in range(iters):
+        batched = ens.run_slice(batched)
+    jax.block_until_ready(batched.steps)
+    dt = time.perf_counter() - t0
+    per_slice = 8192
+    total = n * per_slice * iters
+    return total / dt / 1e6, per_slice * iters / dt / 1e6
+
+
+def mcps(lookup: str = "pht") -> float:
+    comp = Compiler(lookup=lookup)
+    frames = FrameManager(1 << 20)
+    frames.allocate(1)
+    cs = np.zeros(1 << 20, np.int32)
+    prog = ": f dup * over + swap drop ; " + "1 2 f drop drop " * 200
+    t0 = time.perf_counter()
+    n = 0
+    reps = 20
+    for _ in range(reps):
+        before = comp.words_compiled
+        comp.compile_frame(prog, cs, frames)
+        n += comp.words_compiled - before
+    dt = time.perf_counter() - t0
+    return n / dt / 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    m_o = mwps("oracle")
+    rows.append(("vm_mwps_oracle", 1.0 / m_o, f"{m_o:.3f} MWPS (python oracle)"))
+    m_j = mwps("jit")
+    rows.append(("vm_mwps_jit", 1.0 / m_j, f"{m_j:.3f} MWPS (XLA single VM)"))
+    agg, single = mwps_ensemble(32)
+    rows.append(("vm_mwps_ensemble32", 1.0 / agg,
+                 f"{agg:.3f} MWPS aggregate over 32 lock-stepped VMs "
+                 f"({single:.3f} per instance)"))
+    c_pht = mcps("pht")
+    rows.append(("compiler_mcps_pht", 1.0 / c_pht, f"{c_pht:.3f} MCPS (perfect hash)"))
+    c_lst = mcps("lst")
+    rows.append(("compiler_mcps_lst", 1.0 / c_lst, f"{c_lst:.3f} MCPS (linear search table)"))
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table (see DESIGN.md index).
+Prints ``name,us_per_call,derived`` CSV rows per the assignment contract.
+
+    PYTHONPATH=src python -m benchmarks.run [--only vm,ann,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ["lut", "resources", "efficiency", "vm", "ann", "kernels", "roofline"]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of modules")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED modules: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""REXA-JAX: a multi-pod JAX training/serving framework built around the
+REXAVM paper (Bosse, Bornemann, Luessem 2023).
+
+Layers:
+  - ``repro.core.vm``        : the paper's stack VM (ISA spec, JIT compiler,
+                               jitted bytecode interpreter, multi-tasking,
+                               ensemble execution, checkpointing).
+  - ``repro.core.fixedpoint``: the paper's fixed-point numerics (scale
+                               vectors, LUT sigmoid/log10).
+  - ``repro.models``         : the 10 assigned architectures (dense/GQA, MoE,
+                               RWKV6, Mamba2/Zamba2 hybrid, enc-dec, VLM).
+  - ``repro.kernels``        : Pallas TPU kernels (fixmatmul, lutact,
+                               flashattn, rwkv6_scan) with jnp oracles.
+  - ``repro.sharding``       : logical-axis sharding rules (DP/FSDP/TP/EP/SP).
+  - ``repro.train``          : optimizer, data pipeline, train step, trainer.
+  - ``repro.serve``          : KV caches and prefill/decode engines.
+  - ``repro.sched``          : LSA energy/deadline scheduler (paper Alg. 4).
+  - ``repro.resilience``     : checkpointing, replica voting, elastic re-mesh.
+  - ``repro.launch``         : mesh construction, dry-run, train/serve CLIs.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,31 @@
+from repro.config.base import (
+    ModelConfig,
+    ShapeConfig,
+    MeshConfig,
+    TrainConfig,
+    ServeConfig,
+    VMConfig,
+    RunConfig,
+    SHAPES,
+)
+from repro.config.registry import (
+    register_arch,
+    get_arch,
+    list_archs,
+    get_smoke,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "MeshConfig",
+    "TrainConfig",
+    "ServeConfig",
+    "VMConfig",
+    "RunConfig",
+    "SHAPES",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+    "get_smoke",
+]

@@ -1,0 +1,58 @@
+"""Architecture registry: configs register themselves on import.
+
+``get_arch("glm4-9b")`` returns the full assigned config;
+``get_smoke("glm4-9b")`` returns the reduced same-family smoke config used by
+CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from repro.config.base import ModelConfig
+
+_ARCHS: dict[str, ModelConfig] = {}
+_SMOKE: dict[str, ModelConfig] = {}
+
+# Module name per assigned arch id (one file per arch, per instructions).
+_ARCH_MODULES = {
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "granite-34b": "repro.configs.granite_34b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+
+def register_arch(full: ModelConfig, smoke: ModelConfig) -> None:
+    _ARCHS[full.name] = full
+    _SMOKE[full.name] = smoke
+
+
+def _ensure(name: str) -> None:
+    if name not in _ARCHS:
+        if name not in _ARCH_MODULES:
+            raise KeyError(
+                f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}"
+            )
+        importlib.import_module(_ARCH_MODULES[name])
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure(name)
+    return _ARCHS[name]
+
+
+def get_smoke(name: str) -> ModelConfig:
+    _ensure(name)
+    return _SMOKE[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCH_MODULES)

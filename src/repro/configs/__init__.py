@@ -1,0 +1,5 @@
+"""Assigned architecture configs (one module per arch id).
+
+Import any module (or use repro.config.get_arch) to register its full and
+smoke configs.
+"""

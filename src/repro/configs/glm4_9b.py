@@ -1,0 +1,37 @@
+"""glm4-9b — 40L d=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+RoPE + GQA, SwiGLU/RMSNorm. [hf:THUDM/glm-4-9b; hf]
+
+kv_heads (2) < model mesh axis (16): the KV cache shards on batch, query
+heads on model (DESIGN.md §Distribution).  Full attention -> long_500k skip.
+"""
+
+from repro.config import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=10_000.0,
+    activation="silu",
+    attn_bias=True,
+)
+
+SMOKE = FULL.replace(
+    name="glm4-9b-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    dtype="float32",
+)
+
+register_arch(FULL, SMOKE)

@@ -1,0 +1,37 @@
+"""granite-34b — 88L d=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+llama-style blocks, code model. [arXiv:2405.04324; hf]
+
+Largest dense arch: FSDP parameter+optimizer sharding over "data" is
+required (34B params x 16 B/param AdamW state).  Full attention ->
+long_500k skip.
+"""
+
+from repro.config import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    rope_theta=10_000.0,
+    activation="silu",
+)
+
+SMOKE = FULL.replace(
+    name="granite-34b-smoke",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    dtype="float32",
+)
+
+register_arch(FULL, SMOKE)

@@ -1,0 +1,30 @@
+from repro.core.fixedpoint.luts import (
+    LOG10_LUT,
+    SGLUT13,
+    SGLUT310,
+    fplog10,
+    fpsigmoid,
+    fpsigmoid_interp,
+    fpsin,
+    fpsqrt,
+    fprelu,
+    fplog10_jnp,
+    fpsigmoid_jnp,
+    fpsigmoid_interp_jnp,
+    fpsin_jnp,
+    fpsqrt_jnp,
+)
+from repro.core.fixedpoint.fxp import (
+    apply_scale,
+    apply_scale_jnp,
+    quantize_per_channel,
+    dequantize,
+)
+
+__all__ = [
+    "LOG10_LUT", "SGLUT13", "SGLUT310",
+    "fplog10", "fpsigmoid", "fpsigmoid_interp", "fpsin", "fpsqrt", "fprelu",
+    "fplog10_jnp", "fpsigmoid_jnp", "fpsigmoid_interp_jnp", "fpsin_jnp",
+    "fpsqrt_jnp",
+    "apply_scale", "apply_scale_jnp", "quantize_per_channel", "dequantize",
+]

@@ -1,0 +1,65 @@
+"""Scale-vector fixed-point arithmetic (paper §4.3.1, Tab. 5).
+
+The paper's vector ops carry a *scale vector*: "negative scale values reduce,
+positive expand the values by the scale factor" — i.e. per-element integer
+multiply or divide applied after the 32-bit-accumulated op, keeping data in
+the 16-bit working range.  This module implements that scheme (used by the VM
+vector words) and its generalization to per-channel quantization used by the
+``fixmatmul`` Pallas kernel (cf. the scaled-tensor refs [16,17] in the paper).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def apply_scale(v: int, s: int) -> int:
+    """Scalar scale-vector semantics: s>0 expand (v*s), s<0 reduce (v/-s), 0 off."""
+    if s > 0:
+        return int(v) * int(s)
+    if s < 0:
+        # C-style truncation toward zero, as the target microcontrollers do.
+        q = abs(int(v)) // (-int(s))
+        return -q if v < 0 else q
+    return int(v)
+
+
+def apply_scale_jnp(v: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized scale-vector application (int32, truncation toward zero)."""
+    v = v.astype(jnp.int32)
+    s = s.astype(jnp.int32)
+    expanded = v * jnp.where(s > 0, s, 1)
+    divisor = jnp.where(s < 0, -s, 1)
+    reduced = jnp.sign(v) * (jnp.abs(v) // divisor)
+    out = jnp.where(s > 0, expanded, jnp.where(s < 0, reduced, v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-channel quantization for the fixmatmul serving path.
+# ---------------------------------------------------------------------------
+
+def quantize_per_channel(
+    w: np.ndarray | jnp.ndarray, bits: int = 8, axis: int = 0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-channel quantization.
+
+    Returns (q, scale) with ``w ~= q * scale`` where ``q`` is int8/int16 and
+    ``scale`` is a per-channel fp32 vector along ``axis`` of the *output*
+    channels.  This is the paper's scale-vector scheme with the scale stored
+    as the reciprocal float (the VM path keeps integer scales; the TPU path
+    keeps fp32 scales because the MXU output is dequantized in fp32).
+    """
+    w = jnp.asarray(w, dtype=jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    absmax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dtype), scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,25 @@
+from repro.core.vm.spec import (
+    ISA,
+    WORDS,
+    Word,
+    PerfectHashTable,
+    LinearSearchTable,
+    get_isa,
+)
+from repro.core.vm.compiler import Compiler, CompileError, tokenize
+from repro.core.vm.frames import CodeFrame, FrameManager, Dictionary
+from repro.core.vm.ios import FiosRegistry, DiosRegistry
+from repro.core.vm.interp import Interpreter
+from repro.core.vm.oracle import Oracle
+from repro.core.vm.machine import REXAVM, RunResult
+from repro.core.vm.ensemble import EnsembleVM, replicate_state
+from repro.core.vm import vmstate
+
+__all__ = [
+    "ISA", "WORDS", "Word", "PerfectHashTable", "LinearSearchTable", "get_isa",
+    "Compiler", "CompileError", "tokenize",
+    "CodeFrame", "FrameManager", "Dictionary",
+    "FiosRegistry", "DiosRegistry",
+    "Interpreter", "Oracle", "REXAVM", "RunResult",
+    "EnsembleVM", "replicate_state", "vmstate",
+]

@@ -1,0 +1,91 @@
+"""Parallel VM + ensemble execution (paper §3.4 and resilience feature 4).
+
+``vmap`` over the jitted interpreter gives N VM instances sharing one
+decoder — the paper's Parallel VM — and running the *same* code frame on all
+instances enables majority-decision fault masking: a corrupted instance
+(bit-flipped stack, code, or memory — paper §2.6 failure taxonomy) is
+out-voted and flagged, and the voted state can be re-broadcast
+("stopping of faulty computations").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm.interp import Interpreter
+from repro.core.vm.vmstate import VMState
+
+
+@dataclass
+class VoteResult:
+    agree: bool
+    votes: np.ndarray          # (N,) bool: instance matches majority
+    faulty: list[int]          # minority instance ids
+
+
+def replicate_state(st: VMState, n: int) -> VMState:
+    """Broadcast one VM state to an ensemble of ``n`` instances."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(jnp.asarray(x), (n,) + jnp.asarray(x).shape), st)
+
+
+class EnsembleVM:
+    """N lock-stepped VM instances with majority voting."""
+
+    # State fields compared for the vote (the observable computation result).
+    VOTE_FIELDS = ("ds", "dsp", "out", "outp", "pc", "tstatus", "mem")
+
+    def __init__(self, cfg: VMConfig, n: int = 3):
+        assert n >= 1
+        self.cfg = cfg
+        self.n = n
+        from repro.core.vm.interp import get_interpreter
+        self.interp = get_interpreter(cfg)
+        self._run_slice = jax.jit(
+            jax.vmap(lambda s: self.interp._run_slice(s, cfg.steps_per_slice)),
+        )
+        self._vmloop = jax.jit(
+            jax.vmap(lambda s: self.interp._vmloop(s, cfg.steps_per_slice)),
+        )
+
+    def run_slice(self, batched: VMState) -> VMState:
+        out, _ = self._run_slice(batched)
+        return out
+
+    def checksum(self, batched: VMState) -> np.ndarray:
+        """Cheap per-instance digest used for cross-instance comparison."""
+        sums = []
+        for f in self.VOTE_FIELDS:
+            x = np.asarray(getattr(batched, f))
+            sums.append(x.reshape(self.n, -1).astype(np.int64).sum(axis=1))
+        return np.stack(sums, axis=1)  # (N, F)
+
+    def vote(self, batched: VMState) -> VoteResult:
+        """Majority decision over state digests (paper: compare intermediate
+        states and results; majority decision making)."""
+        digests = self.checksum(batched)
+        keys = [tuple(row) for row in digests]
+        counts: dict[tuple, int] = {}
+        for k in keys:
+            counts[k] = counts.get(k, 0) + 1
+        majority = max(counts.items(), key=lambda kv: kv[1])[0]
+        votes = np.array([k == majority for k in keys])
+        return VoteResult(
+            agree=bool(votes.all()),
+            votes=votes,
+            faulty=[i for i, v in enumerate(votes) if not v],
+        )
+
+    def heal(self, batched: VMState, vote: VoteResult) -> VMState:
+        """Re-broadcast a majority instance over faulty ones."""
+        good = int(np.argmax(vote.votes))
+        def fix(x):
+            x = np.array(x)
+            for bad in vote.faulty:
+                x[bad] = x[good]
+            return jnp.asarray(x)
+        return jax.tree.map(fix, batched)

@@ -1,0 +1,97 @@
+"""Input-Output System (paper §3.6, Def. 2): the VM's foreign interface.
+
+``FiosRegistry``  — host functions bridged into the word set (fiosAdd).
+``DiosRegistry``  — host data arrays mapped into the VM address space
+                    at ``MEM_BASE`` (diosAdd); e.g. the ADC sample buffer.
+
+Device-side execution of a FIOS word suspends the task (``ST_IOWAIT`` — the
+paper's "leaving the current VM interpreter loop round"); the host service
+loop pops arguments from the data stack, invokes the callback, pushes the
+result, and resumes.  This *is* the paper's nested-execution-loop design
+(Fig. 10) and is what makes the interpreter fully jittable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.vm.spec import FIOS_BASE, MAX_FIOS, MEM_BASE
+
+
+@dataclass
+class FiosEntry:
+    name: str
+    fn: Callable
+    args: int           # number of cells popped from DS
+    ret: int            # number of cells pushed (0 or 1; 2 for paper doubles)
+
+
+class FiosRegistry:
+    def __init__(self):
+        self.entries: list[FiosEntry] = []
+        self.by_name: dict[str, int] = {}
+
+    def add(self, name: str, fn: Callable, args: int = 0, ret: int = 0) -> int:
+        """fiosAdd (paper Def. 2). Returns the assigned opcode."""
+        if len(self.entries) >= MAX_FIOS:
+            raise RuntimeError("FIOS table full")
+        if name in self.by_name:
+            # Re-registration replaces the callback (incremental updates).
+            idx = self.by_name[name]
+            self.entries[idx] = FiosEntry(name, fn, args, ret)
+            return FIOS_BASE + idx
+        idx = len(self.entries)
+        self.entries.append(FiosEntry(name, fn, args, ret))
+        self.by_name[name] = idx
+        return FIOS_BASE + idx
+
+    def opcode(self, name: str) -> Optional[int]:
+        idx = self.by_name.get(name)
+        return None if idx is None else FIOS_BASE + idx
+
+    def entry_for_opcode(self, opcode: int) -> FiosEntry:
+        return self.entries[opcode - FIOS_BASE]
+
+
+@dataclass
+class DiosEntry:
+    name: str
+    offset: int         # offset of the data (header cell is at offset-1)
+    cells: int
+
+
+class DiosRegistry:
+    """Maps named host arrays into ``mem`` at MEM_BASE+offset.
+
+    Layout per entry: [len, data...]; the VM name resolves to the address of
+    data[0] so that array header conventions match frame-embedded arrays.
+    """
+
+    def __init__(self, mem_size: int):
+        self.mem_size = mem_size
+        self.free = 0
+        self.entries: dict[str, DiosEntry] = {}
+
+    def add(self, name: str, cells: int) -> DiosEntry:
+        """diosAdd (paper Def. 2). Reserves [header + cells] in mem."""
+        if name in self.entries:
+            return self.entries[name]
+        need = cells + 1
+        if self.free + need > self.mem_size:
+            raise MemoryError("DIOS mem exhausted")
+        e = DiosEntry(name, self.free + 1, cells)
+        self.free += need
+        self.entries[name] = e
+        return e
+
+    def address(self, name: str) -> Optional[int]:
+        e = self.entries.get(name)
+        return None if e is None else MEM_BASE + e.offset
+
+    def init_mem(self, mem: np.ndarray) -> None:
+        """Write headers for all registered arrays into a mem buffer."""
+        for e in self.entries.values():
+            mem[e.offset - 1] = e.cells

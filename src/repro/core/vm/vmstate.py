@@ -1,0 +1,134 @@
+"""Device-resident VM state (a pytree) and host<->device conversion.
+
+The whole machine — code segment, stacks, task table, event table, output
+ring — is one NamedTuple of arrays, so it can be jitted over, vmapped into a
+parallel-VM ensemble (paper §3.4) and checkpointed/restored byte-exactly
+(paper resilience feature 5: stop-and-go processing).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm.spec import NUM_EXC, ST_FREE, ST_YIELD
+
+
+class VMState(NamedTuple):
+    # memories
+    cs: jnp.ndarray          # (CS,)  int32 code segment (bytecode + frame data)
+    mem: jnp.ndarray         # (MEM,) int32 DIOS data memory (sample buffers...)
+    # per-task stacks (paper Alg. 6: DS[STACKSIZE*MAXTASKS])
+    ds: jnp.ndarray          # (T, DS) int32
+    rs: jnp.ndarray          # (T, RS) int32
+    fs: jnp.ndarray          # (T, FS) int32
+    dsp: jnp.ndarray         # (T,) int32
+    rsp: jnp.ndarray         # (T,) int32
+    fsp: jnp.ndarray         # (T,) int32
+    # per-task control
+    pc: jnp.ndarray          # (T,) int32
+    tstatus: jnp.ndarray     # (T,) int32 ST_*
+    prio: jnp.ndarray        # (T,) int32
+    deadline: jnp.ndarray    # (T,) int32
+    timeout: jnp.ndarray     # (T,) int32 wake time (virtual ms)
+    ev_addr: jnp.ndarray     # (T,) int32 awaited variable address
+    ev_val: jnp.ndarray      # (T,) int32 awaited value
+    catch_pc: jnp.ndarray    # (T,) int32 exception catch point
+    catch_rsp: jnp.ndarray   # (T,) int32
+    pending_exc: jnp.ndarray # (T,) int32 raised, not yet dispatched
+    last_exc: jnp.ndarray    # (T,) int32 dispatched, readable by `catch`
+    io_op: jnp.ndarray       # (T,) int32 pending FIOS opcode (0 = none)
+    # global
+    handlers: jnp.ndarray    # (NUM_EXC,) int32 exception handler addresses
+    cur: jnp.ndarray         # () int32 current task
+    now: jnp.ndarray         # () int32 virtual time in ms
+    steps: jnp.ndarray       # () int32 executed instruction count (profiling)
+    rng: jnp.ndarray         # () uint32 LCG state
+    out: jnp.ndarray         # (OUT*2,) int32 output ring: [kind, value] pairs
+    outp: jnp.ndarray        # () int32 entries written (pairs)
+
+
+def init_state(cfg: VMConfig, seed: int = 1) -> VMState:
+    T = cfg.max_tasks
+    return VMState(
+        cs=jnp.zeros(cfg.cs_size, jnp.int32),
+        mem=jnp.zeros(cfg.mem_size, jnp.int32),
+        ds=jnp.zeros((T, cfg.ds_size), jnp.int32),
+        rs=jnp.zeros((T, cfg.rs_size), jnp.int32),
+        fs=jnp.zeros((T, cfg.fs_size), jnp.int32),
+        dsp=jnp.zeros(T, jnp.int32),
+        rsp=jnp.zeros(T, jnp.int32),
+        fsp=jnp.zeros(T, jnp.int32),
+        pc=jnp.zeros(T, jnp.int32),
+        tstatus=jnp.full(T, ST_FREE, jnp.int32),
+        prio=jnp.zeros(T, jnp.int32),
+        deadline=jnp.zeros(T, jnp.int32),
+        timeout=jnp.zeros(T, jnp.int32),
+        ev_addr=jnp.zeros(T, jnp.int32),
+        ev_val=jnp.zeros(T, jnp.int32),
+        catch_pc=jnp.zeros(T, jnp.int32),
+        catch_rsp=jnp.zeros(T, jnp.int32),
+        pending_exc=jnp.zeros(T, jnp.int32),
+        last_exc=jnp.zeros(T, jnp.int32),
+        io_op=jnp.zeros(T, jnp.int32),
+        handlers=jnp.zeros(NUM_EXC, jnp.int32),
+        cur=jnp.int32(0),
+        now=jnp.int32(0),
+        steps=jnp.int32(0),
+        rng=jnp.uint32(seed),
+        out=jnp.zeros(cfg.out_ring_size * 2, jnp.int32),
+        outp=jnp.int32(0),
+    )
+
+
+def to_numpy(st: VMState) -> VMState:
+    """Mutable host copy (np.asarray views of jax arrays are read-only)."""
+    return VMState(*[np.array(x) for x in st])
+
+
+def to_device(st: VMState) -> VMState:
+    return VMState(*[jnp.asarray(x) for x in st])
+
+
+def launch_task(st: VMState, task: int, entry: int, prio: int = 0, deadline: int = 0) -> VMState:
+    """Host-side: point task slot ``task`` at ``entry`` and mark it ready."""
+    st = to_numpy(st)
+    st.pc[task] = entry
+    st.dsp[task] = 0
+    st.rsp[task] = 0
+    st.fsp[task] = 0
+    st.tstatus[task] = ST_YIELD
+    st.prio[task] = prio
+    st.deadline[task] = deadline
+    st.catch_pc[task] = 0       # cell 0 holds a canonical `end`
+    st.catch_rsp[task] = 0
+    st.pending_exc[task] = 0
+    st.last_exc[task] = 0
+    st.io_op[task] = 0
+    return st
+
+
+# Output ring entry kinds.
+OUT_NUM = 0
+OUT_CHR = 1
+
+
+def decode_output(st: VMState) -> str:
+    """Render the output ring as text (host side)."""
+    out = np.asarray(st.out)
+    n = int(st.outp)
+    parts: list[str] = []
+    for k in range(n):
+        kind, val = int(out[2 * k]), int(out[2 * k + 1])
+        if kind == OUT_CHR:
+            parts.append(chr(val & 0xFF))
+        else:
+            parts.append(f"{val} ")
+    return "".join(parts)
+
+
+def clear_output(st: VMState) -> VMState:
+    return st._replace(out=jnp.zeros_like(st.out), outp=jnp.int32(0))

@@ -1,0 +1,34 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel directory has:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, reshaping, interpret switch)
+  ref.py    — pure-jnp oracle used by the allclose sweeps in tests/
+
+On this CPU container kernels run under interpret=True; models select the
+kernel vs jnp path via ``repro.kernels.use_kernels()``.
+"""
+
+import jax
+
+_FORCE = None  # None = auto (TPU only), True/False = override
+
+
+def set_kernels(mode):
+    """mode: 'auto' | 'on' | 'off' | 'interpret'."""
+    global _FORCE
+    _FORCE = {"auto": None, "on": True, "off": False, "interpret": "interpret"}[mode]
+
+
+def use_kernels():
+    """True when Pallas kernels should run compiled (TPU, or forced 'on')."""
+    if _FORCE is True:
+        return True
+    if _FORCE in (False, "interpret"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """True only when kernels are forced into interpret mode (CPU testing)."""
+    return _FORCE == "interpret"

@@ -1,0 +1,64 @@
+"""Public fixmatmul op: quantized linear layer y = q(x) @ q(w) with the
+paper's scale-vector dequantization.  Handles padding to tile multiples and
+the interpret-mode switch; used by models/quantized.py (serving path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import quantize_per_channel
+from repro.kernels import interpret_mode, use_kernels
+from repro.kernels.fixmatmul.fixmatmul import fixmatmul
+from repro.kernels.fixmatmul.ref import fixmatmul_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def quantized_matmul(
+    x: jax.Array,            # (..., K) float
+    wq: jax.Array,           # (K, N) int8 (pre-quantized weights)
+    sw: jax.Array,           # (N,) f32 weight scales
+    *,
+    out_dtype=None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+) -> jax.Array:
+    """Dynamic per-row activation quantization + int8 GEMM + dequant."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = wq.shape[1]
+    x2 = x.reshape(-1, K)
+    xq, sx = quantize_per_channel(x2, bits=8, axis=0)
+    sx = sx.reshape(-1)
+
+    if use_kernels() or interpret_mode():
+        M = x2.shape[0]
+        xq_p = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+        wq_p = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+        sx_p = _pad_to(sx, bm, 0)
+        sw_p = _pad_to(sw.reshape(-1), bn, 0)
+        out = fixmatmul(
+            xq_p, wq_p, sx_p, sw_p,
+            bm=bm, bn=bn, bk=bk,
+            out_dtype=jnp.float32,
+            interpret=interpret_mode(),
+        )[:M, :N]
+    else:
+        out = fixmatmul_ref(xq, wq, sx, sw.reshape(-1))
+    return out.reshape(*lead, N).astype(out_dtype)
+
+
+def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(K, N) float -> (int8 (K, N), f32 (N,)) per-output-channel."""
+    q, s = quantize_per_channel(w, bits=8, axis=1)
+    return q, s.reshape(-1)

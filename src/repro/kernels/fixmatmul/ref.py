@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fixmatmul."""
+
+import jax.numpy as jnp
+
+
+def fixmatmul_ref(xq, wq, sx, sw, out_dtype=jnp.float32):
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * sx[:, None].astype(jnp.float32) * sw[None, :].astype(jnp.float32)
+    return out.astype(out_dtype)

@@ -1,0 +1,31 @@
+"""Public flash attention op with BSHD<->BHSD adaptation, padding, and the
+kernel/oracle switch used by models.attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode, use_kernels
+from repro.kernels.flashattn.flashattn import flash_attention
+from repro.kernels.flashattn.ref import flash_attention_ref
+
+
+def attention(q, k, v, *, causal=True, window=None, bq=512, bk=512):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — model layout (BSHD)."""
+    qh = jnp.moveaxis(q, 1, 2)
+    kh = jnp.moveaxis(k, 1, 2)
+    vh = jnp.moveaxis(v, 1, 2)
+    if use_kernels() or interpret_mode():
+        Sq, Sk = qh.shape[2], kh.shape[2]
+        pq = (-Sq) % min(bq, max(Sq, 1))
+        pk = (-Sk) % min(bk, max(Sk, 1))
+        qp = jnp.pad(qh, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        kp = jnp.pad(kh, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vp = jnp.pad(vh, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        out = flash_attention(
+            qp, kp, vp, causal=causal, window=window,
+            bq=bq, bk=bk, interpret=interpret_mode(),
+        )[:, :, :Sq]
+    else:
+        out = flash_attention_ref(qh, kh, vh, causal=causal, window=window)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,15 @@
+"""Oracle for flash_attention: the blocked jnp attention from
+repro.models.attention (layout-adapted)."""
+
+import jax.numpy as jnp
+
+from repro.models.attention import blocked_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd) — BHSD layout like the kernel."""
+    qb = jnp.moveaxis(q, 1, 2)   # (B, Sq, H, hd)
+    kb = jnp.moveaxis(k, 1, 2)
+    vb = jnp.moveaxis(v, 1, 2)
+    out = blocked_attention(qb, kb, vb, causal=causal, window=window)
+    return jnp.moveaxis(out, 1, 2)

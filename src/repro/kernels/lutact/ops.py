@@ -1,0 +1,21 @@
+"""Public lutact op with padding + interpret switch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode, use_kernels
+from repro.kernels.lutact.lutact import lut_sigmoid
+from repro.kernels.lutact.ref import lut_sigmoid_ref
+
+
+def fixed_sigmoid(x, *, bm: int = 256, bn: int = 256):
+    """Fixed-point sigmoid over any-shaped int32 tensor (scale 1:1000)."""
+    if not (use_kernels() or interpret_mode()):
+        return lut_sigmoid_ref(x)
+    flat = x.reshape(1, -1) if x.ndim == 1 else x.reshape(-1, x.shape[-1])
+    M, N = flat.shape
+    pm, pn = (-M) % bm if M > bm else 0, (-N) % bn if N > bn else 0
+    padded = jnp.pad(flat, ((0, pm), (0, pn)))
+    out = lut_sigmoid(padded, bm=bm, bn=bn, interpret=interpret_mode())
+    return out[:M, :N].reshape(x.shape)

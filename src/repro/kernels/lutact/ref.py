@@ -1,0 +1,7 @@
+"""Oracle for the lutact kernel: the interpolated fixed-point sigmoid."""
+
+from repro.core.fixedpoint import fpsigmoid_interp_jnp
+
+
+def lut_sigmoid_ref(x):
+    return fpsigmoid_interp_jnp(x)

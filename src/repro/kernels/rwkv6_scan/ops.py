@@ -1,0 +1,27 @@
+"""Public rwkv6 wkv op used by models.rwkv6.time_mix when kernels are on."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode, use_kernels
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan
+
+
+def wkv(r, k, v, logw, u, state0, head_size: int, *, chunk: int = 64):
+    """(B, S, D)-layout entry point matching models.rwkv6.chunked_wkv."""
+    B, S, D = r.shape
+    K = head_size
+    H = D // K
+
+    def heads(x):
+        return jnp.moveaxis(x.reshape(B, S, H, K), 2, 1)
+
+    args = (heads(r), heads(k), heads(v), heads(logw).astype(jnp.float32),
+            u.reshape(H, K).astype(jnp.float32), state0)
+    if use_kernels() or interpret_mode():
+        out, s1 = rwkv6_scan(*args, chunk=chunk, interpret=interpret_mode())
+    else:
+        out, s1 = rwkv6_scan_ref(*args)
+    return jnp.moveaxis(out, 1, 2).reshape(B, S, D), s1

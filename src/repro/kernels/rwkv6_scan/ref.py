@@ -1,0 +1,19 @@
+"""Oracle for rwkv6_scan: models.rwkv6.chunked_wkv (layout-adapted)."""
+
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import chunked_wkv
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, state0):
+    """Inputs in kernel layout (B, H, S, K); u (H, K); state (B, H, K, K)."""
+    B, H, S, K = r.shape
+
+    def flat(x):
+        # (B, H, S, K) -> (B, S, H*K)
+        return jnp.moveaxis(x, 1, 2).reshape(B, S, H * K)
+
+    out, s1 = chunked_wkv(
+        flat(r), flat(k), flat(v), flat(logw), u.reshape(H * K), state0, K
+    )
+    return jnp.moveaxis(out.reshape(B, S, H, K), 2, 1), s1

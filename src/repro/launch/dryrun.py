@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape x mesh) cell against
+ShapeDtypeStruct inputs on 512 forced host devices, printing
+``memory_analysis()`` and ``cost_analysis()`` per cell and writing a JSON
+artifact consumed by the roofline analysis (repro/roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --multi-pod both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.config import (
+    MeshConfig,
+    RunConfig,
+    SHAPES,
+    get_arch,
+    list_archs,
+)
+from repro.config.base import shape_runs_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_for_shape
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    roofline_terms,
+    roofline_terms_from,
+    summarize_cost,
+)
+from repro.roofline import analytic
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             parallelism: str = "tp_sp", grad_compression: str = "none",
+             microbatches: int = 1,
+             model_overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; return the roofline artifact record."""
+    model_cfg = get_arch(arch)
+    if model_overrides:
+        model_cfg = model_cfg.replace(**model_overrides)
+    shape = SHAPES[shape_name]
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "parallelism": parallelism,
+    }
+    if not shape_runs_for(model_cfg, shape):
+        record["status"] = "skipped (full attention)"
+        return record
+
+    mesh_cfg = MeshConfig(multi_pod=multi_pod)
+    from dataclasses import replace as _dc_replace
+    from repro.config import TrainConfig
+    run = RunConfig(
+        model=model_cfg, shape=shape, mesh=mesh_cfg,
+        train=TrainConfig(
+            grad_compression=grad_compression, microbatches=microbatches
+        ),
+        parallelism=parallelism,
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    sharded = build_for_shape(run, mesh)
+    with mesh:
+        lowered = sharded.fn.lower(*sharded.arg_specs)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        # Collectives exist only after SPMD partitioning -> compiled HLO.
+        hlo_txt = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo_txt)
+        from repro.roofline.analysis import collective_bytes_scaled
+        coll_scaled = collective_bytes_scaled(hlo_txt, model_cfg.num_layers)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory={
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        cost=summarize_cost(cost),
+        collective_bytes=coll,
+        collective_bytes_scaled=coll_scaled,
+    )
+    # HLO-based terms (cross-check; while-loop undercount caveat).
+    record["roofline_hlo"] = roofline_terms(
+        record["cost"], coll, model_cfg, shape, mesh_cfg
+    )
+    # Analytic terms (primary; see repro/roofline/analytic.py).
+    if shape.kind == "decode":
+        fl = analytic.decode_flops(model_cfg, shape.global_batch, shape.seq_len)
+    else:
+        stack, head = analytic.forward_flops(
+            model_cfg, shape.global_batch, shape.seq_len
+        )
+        # train: fwd + bwd(2x) + remat re-fwd (layer stack only)
+        stack_mult = 4 if model_cfg.remat else 3
+        fl = stack_mult * stack + 3 * head if shape.kind == "train" else stack + head
+    wb = 1.0 if model_cfg.quantized_serve else 2.0
+    cb = (1.0 + 4.0 / model_cfg.head_dim) if model_cfg.kv_cache_dtype == "int8" else 2.0
+    record["analytic"] = {
+        "flops_global": fl,
+        "hbm_bytes_global": analytic.hbm_bytes(
+            model_cfg, shape, weight_bytes=wb, cache_bytes=cb
+        ),
+        "collective_per_chip": analytic.collective_bytes(
+            model_cfg, shape, mesh_cfg,
+            preset=parallelism, grad_compression=grad_compression,
+        ),
+    }
+    record["roofline"] = roofline_terms_from(
+        fl,
+        record["analytic"]["hbm_bytes_global"],
+        record["analytic"]["collective_per_chip"],
+        model_cfg, shape, mesh_cfg,
+    )
+    if verbose:
+        m = record["memory"]
+        per_dev = (
+            m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+        ) / 2**30
+        print(f"    memory/device: args+temp = {per_dev:.2f} GiB")
+        print(f"    flops={record['cost'].get('flops', 0):.3e} "
+              f"coll_bytes={sum(coll.values()):.3e}")
+        print(f"    roofline: {record['roofline']}")
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument(
+        "--multi-pod", default="both", choices=["single", "multi", "both"],
+        help="which production mesh(es) to exercise",
+    )
+    ap.add_argument("--out", default="artifacts/dryrun", help="artifact dir")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires 512 forced host devices; do not import jax before "
+        "this module sets XLA_FLAGS"
+    )
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                print(f"[dryrun] {tag}")
+                try:
+                    rec = run_cell(arch, shape, mp)
+                    records.append(rec)
+                    print(f"    -> {rec['status']}")
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    failures.append(tag)
+                    records.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAILED: {type(e).__name__}: {e}",
+                    })
+                fname = outdir / "dryrun.json"
+                fname.write_text(json.dumps(records, indent=1))
+
+    print(f"\n[dryrun] {len(records)} cells, {len(failures)} failures")
+    for f in failures:
+        print(f"  FAILED: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

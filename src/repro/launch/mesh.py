@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: one pod = (16, 16) chips over
+    ("data", "model"); two pods add an outer "pod" axis -> (2, 16, 16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    """Generic mesh from a MeshConfig (small meshes for tests)."""
+    return jax.make_mesh(cfg.shape, cfg.axis_names)

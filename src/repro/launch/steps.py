@@ -1,0 +1,281 @@
+"""Sharded step builders: the bridge between models and the mesh.
+
+``build_train_step`` / ``build_prefill`` / ``build_decode`` return jittable
+functions with explicit in/out shardings plus the ShapeDtypeStruct trees the
+dry-run lowers against.  All model tracing happens inside a
+``logical_rules`` context so activation constraints bind to the mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.models.model import Model, build_model
+from repro.sharding.api import logical_rules
+from repro.sharding.cache_specs import cache_pspec
+from repro.sharding.rules import batch_pspec, make_rules, param_pspec_tree
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+
+@dataclass
+class ShardedFn:
+    fn: Callable                # jitted, sharded
+    arg_specs: tuple            # ShapeDtypeStruct trees for .lower(*arg_specs)
+    in_shardings: tuple
+    out_shardings: Any
+    mesh: Mesh
+
+
+def _batch_shardings(mesh, mesh_cfg, batch_shapes, preset: str = "tp_sp"):
+    import numpy as np
+
+    if preset == "dp":
+        axes = tuple(mesh_cfg.axis_names)
+        size = int(np.prod(mesh_cfg.shape))
+    else:
+        axes = mesh_cfg.dp_axes
+        size = mesh_cfg.data * (mesh_cfg.pods if mesh_cfg.multi_pod else 1)
+    axes = axes if len(axes) > 1 else axes[0]
+
+    def spec(x):
+        nd = len(x.shape)
+        B = x.shape[0]
+        b_ax = axes if (B % size == 0 and B > 1) else None
+        return NamedSharding(mesh, P(b_ax, *([None] * (nd - 1))))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+
+
+def _with_moe_groups(run: RunConfig) -> RunConfig:
+    """MoE grouped dispatch: one group per DP shard (keeps the token
+    permutation tensors sharded; see models/moe.py)."""
+    cfg = run.model
+    if cfg.family != "moe" or cfg.moe_groups != 1:
+        return run
+    mesh_cfg = run.mesh
+    if run.parallelism == "dp":
+        import numpy as np
+        g = int(np.prod(mesh_cfg.shape))
+    else:
+        g = mesh_cfg.data * (mesh_cfg.pods if mesh_cfg.multi_pod else 1)
+    tokens = run.shape.global_batch * run.shape.seq_len
+    if tokens % g == 0:
+        run = run.replace(model=cfg.replace(moe_groups=g))
+    return run
+
+
+def build_train_step(run: RunConfig, mesh: Mesh, *, fsdp: bool = True) -> ShardedFn:
+    """Sharded train step: FSDP+TP params/optimizer, DP batch."""
+    run = _with_moe_groups(run)
+    model = build_model(run.model)
+    mesh_cfg = run.mesh
+    rules = make_rules(mesh, mesh_cfg, act_seq=True, preset=run.parallelism)
+    train_step = make_train_step(model, run.train)
+
+    def fn(state, batch):
+        with logical_rules(rules):
+            return train_step(state, batch)
+
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(model, run.train, jax.random.key(0))
+    )
+    pspecs = param_pspec_tree(
+        state_shapes.params, mesh_cfg, fsdp=fsdp, preset=run.parallelism
+    )
+    state_specs = TrainState(
+        params=pspecs,
+        opt=_opt_pspec_tree(state_shapes.opt, pspecs),
+        rng=P(),
+        step=P(),
+    )
+    state_sh = _named_tree(mesh, state_specs, state_shapes)
+
+    batch_shapes = model.input_specs(run.shape)
+    batch_sh = _batch_shardings(mesh, mesh_cfg, batch_shapes, preset=run.parallelism)
+    metrics_sh = {
+        k: replicated(mesh) for k in ("ce", "z_loss", "aux", "grad_norm", "lr", "loss")
+    }
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return ShardedFn(
+        fn=jitted,
+        arg_specs=(state_shapes, batch_shapes),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        mesh=mesh,
+    )
+
+
+def _opt_pspec_tree(opt_shapes, param_pspecs):
+    """Optimizer moments inherit the parameter partition specs; scalar
+    placeholders (lion/sgd) replicate."""
+    from repro.train.optimizer import OptState
+
+    def match(m):
+        return param_pspecs if _same_structure(m, param_pspecs) else jax.tree.map(lambda _: P(), m)
+
+    return OptState(
+        step=P(),
+        m=match(opt_shapes.m),
+        v=match(opt_shapes.v),
+    )
+
+
+def _same_structure(a, b) -> bool:
+    try:
+        jax.tree.map(lambda *_: None, a, b)
+        return True
+    except (ValueError, TypeError):
+        return False
+
+
+def _named_tree(mesh, spec_tree, shape_tree):
+    return jax.tree.map(
+        lambda s, _x: NamedSharding(mesh, s),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_prefill(run: RunConfig, mesh: Mesh) -> ShardedFn:
+    """Sharded full-sequence forward (inference prefill): TP params, DP batch."""
+    run = _with_moe_groups(run)
+    model = build_model(run.model)
+    mesh_cfg = run.mesh
+    rules = make_rules(mesh, mesh_cfg, act_seq=True)
+
+    def fn(params, batch):
+        with logical_rules(rules):
+            logits, _ = model.forward(params, batch)
+            return logits
+
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = param_pspec_tree(param_shapes, mesh_cfg, fsdp=False)
+    params_sh = _named_tree(mesh, pspecs, param_shapes)
+
+    batch_shapes = model.input_specs(run.shape)
+    batch_sh = _batch_shardings(mesh, mesh_cfg, batch_shapes)
+
+    B = run.shape.global_batch
+    V = run.model.padded_vocab
+    dp_size = mesh_cfg.data * (mesh_cfg.pods if mesh_cfg.multi_pod else 1)
+    dp = mesh_cfg.dp_axes
+    dp = dp if len(dp) > 1 else dp[0]
+    out_sh = NamedSharding(
+        mesh,
+        P(dp if B % dp_size == 0 else None, None,
+          "model" if V % mesh_cfg.model == 0 else None),
+    )
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh), out_shardings=out_sh)
+    return ShardedFn(
+        fn=jitted,
+        arg_specs=(param_shapes, batch_shapes),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=out_sh,
+        mesh=mesh,
+    )
+
+
+def build_decode(run: RunConfig, mesh: Mesh) -> ShardedFn:
+    """Sharded single-token decode (serve_step) against a full KV cache."""
+    model_cfg = run.model
+    shape = run.shape
+    mesh_cfg = run.mesh
+    # Long-context hybrid: the shared attention block uses a sliding window
+    # (DESIGN.md deviation note) — override before building.
+    if shape.name == "long_500k" and model_cfg.family == "hybrid" and model_cfg.sliding_window is None:
+        model_cfg = model_cfg.replace(sliding_window=run.serve.long_window)
+    model = build_model(model_cfg)
+    seq_shard = shape.global_batch == 1
+
+    from repro.sharding.cache_specs import kv_cache_layout as kv_layout_fn
+
+    cache_len = shape.seq_len
+    if model_cfg.sliding_window is not None:
+        cache_len = min(cache_len, model_cfg.sliding_window)
+    layout = kv_layout_fn(
+        model_cfg, mesh_cfg, shape.global_batch, cache_len, seq_shard=seq_shard
+    )
+    rules = make_rules(
+        mesh, mesh_cfg, seq_sharding=seq_shard, kv_cache_layout=layout
+    )
+
+    def fn(params, cache, tokens):
+        with logical_rules(rules):
+            return model.decode_step(params, cache, {"tokens": tokens}["tokens"])
+
+    B, S = shape.global_batch, shape.seq_len
+    if model_cfg.quantized_serve:
+        # Paper-C4 serving: int8 weights + per-channel scale vectors.
+        from repro.models.quantized import quantize_params
+
+        init_fn = lambda k: quantize_params(model.init(k))
+    else:
+        init_fn = model.init
+    param_shapes = jax.eval_shape(init_fn, jax.random.key(0))
+    pspecs = param_pspec_tree(param_shapes, mesh_cfg, fsdp=False)
+    params_sh = _named_tree(mesh, pspecs, param_shapes)
+
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_specs = cache_pspec(model_cfg, mesh_cfg, B, S, seq_shard=seq_shard)
+    cache_sh = _named_tree(mesh, cache_specs, cache_shapes)
+
+    tok_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    dp = mesh_cfg.dp_axes
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_size = mesh_cfg.data * (mesh_cfg.pods if mesh_cfg.multi_pod else 1)
+    tok_sh = NamedSharding(mesh, P(dp if B % dp_size == 0 and B > 1 else None, None))
+
+    V = model_cfg.padded_vocab
+    logits_sh = NamedSharding(
+        mesh,
+        P(dp if B % dp_size == 0 and B > 1 else None, None,
+          "model" if V % mesh_cfg.model == 0 else None),
+    )
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, cache_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return ShardedFn(
+        fn=jitted,
+        arg_specs=(param_shapes, cache_shapes, tok_shape),
+        in_shardings=(params_sh, cache_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        mesh=mesh,
+    )
+
+
+def build_for_shape(run: RunConfig, mesh: Mesh) -> ShardedFn:
+    """Dispatch on the shape kind (train/prefill/decode)."""
+    if run.shape.kind == "train":
+        return build_train_step(run, mesh)
+    if run.shape.kind == "prefill":
+        return build_prefill(run, mesh)
+    return build_decode(run, mesh)

@@ -1,0 +1,235 @@
+"""Attention: GQA + RoPE, optional sliding window, blocked (flash-style)
+softmax for long sequences, and single-token decode against a KV cache.
+
+The blocked implementation is the pure-JAX oracle twin of the Pallas
+``flashattn`` kernel (kernels/flashattn/ref.py re-exports it); models call
+this path whenever kernels are disabled (CPU smoke tests, dry-run lowering).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.api import logical
+
+NEG_INF = -1e30
+
+
+# -- RoPE ------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# -- blocked causal attention (training / prefill) --------------------------------
+
+def blocked_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, KV, hd)
+    v: jnp.ndarray,            # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 1024,
+    k_block: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks; GQA via head grouping.
+
+    ``q_offset`` shifts query positions (prefill continuation).  Memory peak
+    is O(B * H * q_block * k_block) instead of O(Sq * Sk).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq = (Sq + q_block - 1) // q_block
+    nk = (Sk + k_block - 1) // k_block
+    # Pad to block multiples.
+    q = jnp.pad(q, ((0, 0), (0, nq * q_block - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * k_block - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * k_block - Sk), (0, 0), (0, 0)))
+
+    # (B, nq, qb, KV, G, hd)
+    qg = q.reshape(B, nq, q_block, KV, G, hd)
+    kg = k.reshape(B, nk, k_block, KV, hd)
+    vg = v.reshape(B, nk, k_block, KV, hd)
+
+    def q_block_fn(qi, q_blk):
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk = lax.dynamic_index_in_dim(kg, ki, axis=1, keepdims=False)
+            v_blk = lax.dynamic_index_in_dim(vg, ki, axis=1, keepdims=False)
+            k_pos = ki * k_block + jnp.arange(k_block)
+            # scores: (B, KV, G, qb, kb), f32
+            s = jnp.einsum(
+                "bqngh,bknh->bngqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((q_block, k_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            mask &= (k_pos < Sk)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            # p cast to the KV dtype for the MXU; accumulation stays f32.
+            pv = jnp.einsum(
+                "bngqk,bknh->bngqh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        (acc, m, l), _ = lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, qb, hd) -> (B, qb, KV, G, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    # Flash-style backward: recompute each q-block's kv scan instead of
+    # stashing per-block probabilities (O(S^2) residuals otherwise — this
+    # was a measured 25 GiB/chip peak on granite-34b train_4k; see
+    # EXPERIMENTS.md §Perf memory iterations).
+    q_block_fn = jax.checkpoint(q_block_fn)
+
+    # map over query blocks: qg (B, nq, qb, KV, G, hd) -> per-block outputs
+    outs = lax.map(lambda args: q_block_fn(*args), (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    # outs: (nq, B, qb, KV, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_block, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# -- decode attention (one new token vs a KV cache) ---------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_cache, KV, hd) — roped keys (bf16 or int8)
+    v: jnp.ndarray          # (B, S_cache, KV, hd)
+    ks: jnp.ndarray         # per-(token, head) dequant scales, (B,S,KV,1) f32
+    vs: jnp.ndarray         #   (placeholder (1,1,1,1) when cache is float)
+    pos: jnp.ndarray        # () int32 — next absolute position (= tokens seen)
+
+    @staticmethod
+    def init(batch, length, kv_heads, head_dim, dtype):
+        """``dtype`` int8 enables the paper-C4 quantized cache: int8 payload
+        + per-(token, head) fp32 scale vectors (1/64 overhead at hd=64)."""
+        quant = jnp.issubdtype(jnp.dtype(dtype), jnp.integer)
+        scale_shape = (batch, length, kv_heads, 1) if quant else (1, 1, 1, 1)
+        return KVCache(
+            k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+            v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+            ks=jnp.ones(scale_shape, jnp.float32),
+            vs=jnp.ones(scale_shape, jnp.float32),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def quantized(self) -> bool:
+        return jnp.issubdtype(self.k.dtype, jnp.integer)
+
+
+def _quantize_token(x: jnp.ndarray):
+    """x: (B, 1, KV, hd) float -> (int8, scale (B,1,KV,1))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(
+    q: jnp.ndarray,           # (B, 1, H, hd) — roped at current position
+    k_new: jnp.ndarray,       # (B, 1, KV, hd) — roped at current position
+    v_new: jnp.ndarray,
+    cache: KVCache,
+    *,
+    window: Optional[int] = None,
+) -> tuple[jnp.ndarray, KVCache]:
+    """Single-token attention against the cache.
+
+    Full cache: slot = pos (cache length covers the whole context).
+    Sliding window (``window`` = cache length): ring-buffer slot = pos % W;
+    masking keeps only the last ``window`` positions.
+    """
+    B, _, H, hd = q.shape
+    _, S, KV, _ = cache.k.shape
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    pos = cache.pos
+
+    slot = (pos % S) if window is not None else pos
+    quant = cache.quantized
+    if quant:
+        kq, ksc = _quantize_token(k_new)
+        vq, vsc = _quantize_token(v_new)
+        k_cache = lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
+        ks = lax.dynamic_update_slice_in_dim(cache.ks, ksc, slot, axis=1)
+        vs = lax.dynamic_update_slice_in_dim(cache.vs, vsc, slot, axis=1)
+    else:
+        k_cache = lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        ks, vs = cache.ks, cache.vs
+    # Pin the cache layout so XLA cannot invent a divergent in-loop
+    # partitioning (which would all-gather the whole cache per step).
+    k_cache = logical(k_cache, "cache_batch", "kv_seq", "cache_kv", None)
+    v_cache = logical(v_cache, "cache_batch", "kv_seq", "cache_kv", None)
+
+    qg = q.reshape(B, KV, G, hd)
+    if quant:
+        # Dequant fuses into the contraction's read stream on TPU: the HBM
+        # traffic is the int8 payload + 1/hd scales (paper C4 serving path).
+        kk = k_cache.astype(jnp.bfloat16) * ks.astype(jnp.bfloat16)
+        s = jnp.einsum("bngh,bsnh->bngs", qg.astype(jnp.bfloat16), kk,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum("bngh,bsnh->bngs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)
+    if window is None:
+        valid = idx <= pos
+    else:
+        # Ring buffer: slots written within the last `window` steps.
+        age = (pos - idx) % S
+        valid = (age < jnp.minimum(pos + 1, S))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quant:
+        vv = v_cache.astype(jnp.bfloat16) * vs.astype(jnp.bfloat16)
+        o = jnp.einsum("bngs,bsnh->bngh", p.astype(jnp.bfloat16), vv,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum(
+            "bngs,bsnh->bngh", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+    out = o.reshape(B, 1, H, hd).astype(q.dtype)
+    return out, KVCache(k=k_cache, v=v_cache, ks=ks, vs=vs, pos=pos + 1)

@@ -1,0 +1,126 @@
+"""Shared model building blocks (pure JAX; no flax).
+
+Parameters are plain nested dicts of jnp arrays.  Layer stacks store each
+leaf with a leading L axis and run under ``lax.scan`` (MaxText-style), which
+keeps lowering time flat in depth and gives natural per-layer remat.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.api import logical
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# -- initializers --------------------------------------------------------------
+
+def normal_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fanin_init(key, shape, dtype):
+    """Truncated-normal-ish with 1/sqrt(fan_in) scale (fan_in = dim -2)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class KeyGen:
+    """Sequential RNG splitter for init functions."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+# -- primitive ops ---------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return ((x32 * rms) * w.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str) -> Callable:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "gelu_tanh":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_swiglu(x, w1, w3, w2, act, use_bias=False, b1=None, b3=None, b2=None):
+    """Gated MLP: act(x@w1) * (x@w3) @ w2 (llama-style)."""
+    h = jnp.einsum("...d,df->...f", x, w1)
+    g = jnp.einsum("...d,df->...f", x, w3)
+    if use_bias:
+        h = h + b1
+        g = g + b3
+    h = act(h) * g
+    h = logical(h, "batch", "seq", "ff")
+    o = jnp.einsum("...f,fd->...d", h, w2)
+    if use_bias:
+        o = o + b2
+    return o
+
+
+def mlp_plain(x, w1, w2, act, use_bias=False, b1=None, b2=None):
+    """Non-gated MLP (starcoder2/whisper style)."""
+    h = jnp.einsum("...d,df->...f", x, w1)
+    if use_bias:
+        h = h + b1
+    h = act(h)
+    h = logical(h, "batch", "seq", "ff")
+    o = jnp.einsum("...f,fd->...d", h, w2)
+    if use_bias:
+        o = o + b2
+    return o
+
+
+def layernorm(x, w, b, eps):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position embeddings."""
+    pos = np.arange(seq_len)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    pe = np.zeros((seq_len, dim), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe, dtype=dtype)
+
+
+def sinusoidal_at(pos, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Single sinusoidal position row at dynamic position ``pos``."""
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2) / dim)
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((dim,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def unstack_tree(tree, idx):
+    """Select layer ``idx`` from a stacked (L, ...) param tree."""
+    return jax.tree.map(lambda x: x[idx], tree)

@@ -1,0 +1,67 @@
+"""Analytic parameter counting (for roofline MODEL_FLOPS = 6*N*D).
+
+Counts come from the *actual* parameter tree via ``jax.eval_shape`` over the
+model's init — no allocation, exact by construction.  For MoE archs the
+active count scales routed-expert leaves by top_k / num_experts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_flatten_with_names
+
+
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg_key):
+    cfg = _CFG_CACHE[cfg_key]
+    from repro.models.model import build_model
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    return tree_flatten_with_names(shapes)
+
+
+_CFG_CACHE: dict = {}
+
+
+def _named_shapes(cfg):
+    key = (cfg.name, cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size,
+           cfg.num_experts, cfg.moe_d_ff, cfg.moe_pad_to)
+    _CFG_CACHE[key] = cfg
+    return _param_shapes(key)
+
+
+def param_count(cfg) -> int:
+    """Total parameters, excluding padded (never-routed) expert slots."""
+    total = 0
+    for name, x in _named_shapes(cfg):
+        n = int(np.prod(x.shape))
+        if cfg.num_experts > 0 and "/moe/w" in name and "shared" not in name:
+            ep = x.shape[1]  # (L, Ep, ...) stacked layer axis first
+            n = n * cfg.num_experts // ep
+        total += n
+    return total
+
+
+def embedding_param_count(cfg) -> int:
+    return sum(
+        int(np.prod(x.shape))
+        for n, x in _named_shapes(cfg)
+        if "embed" in n or "lm_head" in n
+    )
+
+
+def active_param_count(cfg) -> int:
+    """Per-token active parameters (MoE: top_k of num_experts routed)."""
+    total = 0
+    for name, x in _named_shapes(cfg):
+        n = int(np.prod(x.shape))
+        if cfg.num_experts > 0 and "/moe/w" in name and "shared" not in name:
+            ep = x.shape[1]
+            n = n * cfg.num_experts_per_tok // ep
+        total += n
+    return total

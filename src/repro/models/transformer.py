@@ -1,0 +1,265 @@
+"""Transformer stacks for all assigned families.
+
+One parameterized block implementation covers the dense archs (llama-style
+SwiGLU/RMSNorm, starcoder2 LayerNorm+GELU+bias, whisper enc-dec); the MoE
+archs swap the MLP for ``moe_sorted``; zamba2 interleaves Mamba2 blocks with
+a weight-shared attention block; rwkv6 uses its own mix blocks.
+
+Layers are stacked (leading L axis) and applied under ``lax.scan`` with
+optional per-layer remat (``cfg.remat``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rw
+from repro.models.attention import (
+    KVCache,
+    apply_rope,
+    blocked_attention,
+    decode_attention,
+)
+from repro.models.common import (
+    KeyGen,
+    act_fn,
+    dtype_of,
+    fanin_init,
+    layernorm,
+    mlp_plain,
+    mlp_swiglu,
+    normal_init,
+    rmsnorm,
+    sinusoidal_positions,
+)
+from repro.models.moe import moe_sorted
+from repro.models.quantized import qlinear
+from repro.sharding.api import logical
+
+
+def norm(cfg: ModelConfig, x, p, prefix: str):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p[f"{prefix}_w"], p[f"{prefix}_b"], cfg.norm_eps)
+    return rmsnorm(x, p[f"{prefix}_w"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, prefix: str, d: int, dtype) -> dict:
+    out = {f"{prefix}_w": jnp.ones((d,), dtype)}
+    if cfg.norm_type == "layernorm":
+        out[f"{prefix}_b"] = jnp.zeros((d,), dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by dense / moe / encdec / hybrid)
+# ---------------------------------------------------------------------------
+
+def init_attn_params(kg: KeyGen, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    p = {
+        "wq": fanin_init(kg(), (d, cfg.q_dim), dtype),
+        "wk": fanin_init(kg(), (d, cfg.kv_dim), dtype),
+        "wv": fanin_init(kg(), (d, cfg.kv_dim), dtype),
+        "wo": fanin_init(kg(), (cfg.q_dim, d), dtype),
+    }
+    if cfg.use_bias or cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((cfg.head_dim,), dtype)
+        p["kn"] = jnp.ones((cfg.head_dim,), dtype)
+    return p
+
+
+def qkv(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    q = qlinear(x, p["wq"])
+    k = qlinear(x, p["wk"])
+    v = qlinear(x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_out(p, out):
+    B, S, H, hd = out.shape
+    o = qlinear(out.reshape(B, S, H * hd), p["wo"])
+    if "bo" in p:
+        o = o + p["bo"]
+    return o
+
+
+def self_attention_full(p, cfg: ModelConfig, x, *, causal=True, use_rope=True,
+                        window=None, q_block=1024, k_block=1024):
+    """Full-sequence self attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = qkv(p, cfg, x)
+    if use_rope:
+        pos = jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = logical(q, "batch", "seq", "heads", None)
+    k = logical(k, "batch", "seq", "kv_heads", None)
+    from repro.kernels import interpret_mode, use_kernels
+    if use_kernels() or interpret_mode():
+        from repro.kernels.flashattn.ops import attention as flash_attn_op
+        out = flash_attn_op(q, k, v, causal=causal, window=window,
+                            bq=min(q_block, 512), bk=min(k_block, 512))
+    else:
+        out = blocked_attention(
+            q, k, v, causal=causal, window=window, q_block=q_block, k_block=k_block
+        )
+    out = logical(out, "batch", "seq", "heads", None)
+    return attn_out(p, out)
+
+
+def self_attention_decode(p, cfg: ModelConfig, x, cache: KVCache, *, use_rope=True,
+                          window=None):
+    """One-token self attention against the KV cache."""
+    q, k, v = qkv(p, cfg, x)
+    if use_rope:
+        pos = cache.pos[None, None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    out, cache = decode_attention(q, k, v, cache, window=window)
+    return attn_out(p, out), cache
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc_k, enc_v):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    B, S, _ = x.shape
+    q = qlinear(x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    out = blocked_attention(q, enc_k, enc_v, causal=False,
+                            q_block=min(1024, S), k_block=enc_k.shape[1])
+    return attn_out(p, out)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder layer
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(kg: KeyGen, cfg: ModelConfig, dtype, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_gated:
+        p = {
+            "w1": fanin_init(kg(), (d, f), dtype),
+            "w3": fanin_init(kg(), (d, f), dtype),
+            "w2": fanin_init(kg(), (f, d), dtype),
+        }
+        if cfg.use_bias:
+            p |= {"b1": jnp.zeros((f,), dtype), "b3": jnp.zeros((f,), dtype),
+                  "b2": jnp.zeros((cfg.d_model,), dtype)}
+    else:
+        p = {
+            "w1": fanin_init(kg(), (d, f), dtype),
+            "w2": fanin_init(kg(), (f, d), dtype),
+        }
+        if cfg.use_bias:
+            p |= {"b1": jnp.zeros((f,), dtype), "b2": jnp.zeros((d,), dtype)}
+    return p
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    act = act_fn(cfg.activation)
+    if isinstance(p["w1"], dict):   # int8 serving path (paper C4)
+        h = act(qlinear(x, p["w1"]))
+        if cfg.mlp_gated:
+            h = h * qlinear(x, p["w3"])
+        h = logical(h, "batch", "seq", "ff")
+        return qlinear(h, p["w2"])
+    if cfg.mlp_gated:
+        return mlp_swiglu(x, p["w1"], p["w3"], p["w2"], act, cfg.use_bias,
+                          p.get("b1"), p.get("b3"), p.get("b2"))
+    return mlp_plain(x, p["w1"], p["w2"], act, cfg.use_bias, p.get("b1"), p.get("b2"))
+
+
+def init_moe_params(kg: KeyGen, cfg: ModelConfig, dtype) -> dict:
+    d, fe, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ep = cfg.num_expert_slots  # padded for EP mesh divisibility (e.g. 60->64)
+    p = {
+        "router": normal_init(kg(), (d, e), jnp.float32),
+        "w1": fanin_init(kg(), (ep, d, fe), dtype),
+        "w3": fanin_init(kg(), (ep, d, fe), dtype),
+        "w2": fanin_init(kg(), (ep, fe, d), dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        fs = fe * cfg.num_shared_experts
+        p["shared"] = {
+            "w1": fanin_init(kg(), (d, fs), dtype),
+            "w3": fanin_init(kg(), (d, fs), dtype),
+            "w2": fanin_init(kg(), (fs, d), dtype),
+        }
+    return p
+
+
+def init_decoder_layer(kg: KeyGen, cfg: ModelConfig, dtype, moe: bool) -> dict:
+    p = {"attn": init_attn_params(kg, cfg, dtype)}
+    p |= init_norm(cfg, "ln1", cfg.d_model, dtype)
+    p |= init_norm(cfg, "ln2", cfg.d_model, dtype)
+    if moe:
+        p["moe"] = init_moe_params(kg, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp_params(kg, cfg, dtype)
+    return p
+
+
+def decoder_layer_full(p, cfg: ModelConfig, x, *, q_block=1024, k_block=1024):
+    """Train/prefill layer.  Returns (x, aux_loss)."""
+    h = norm(cfg, x, p, "ln1")
+    attn = self_attention_full(
+        p["attn"], cfg, h, window=cfg.sliding_window,
+        q_block=q_block, k_block=k_block,
+    )
+    x = x + attn
+    h = norm(cfg, x, p, "ln2")
+    if "moe" in p:
+        mo = moe_sorted(
+            h, p["moe"], num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok, act=act_fn(cfg.activation),
+            capacity_factor=cfg.moe_capacity_factor,
+            shared=p["moe"].get("shared"),
+            groups=cfg.moe_groups,
+        )
+        x = x + mo.y
+        return x, mo.aux_loss
+    x = x + apply_mlp(p["mlp"], cfg, h)
+    return x, jnp.float32(0.0)
+
+
+def decoder_layer_decode(p, cfg: ModelConfig, x, cache: KVCache, *, window=None):
+    h = norm(cfg, x, p, "ln1")
+    attn, cache = self_attention_decode(
+        p["attn"], cfg, h, cache, window=window or cfg.sliding_window
+    )
+    x = x + attn
+    h = norm(cfg, x, p, "ln2")
+    if "moe" in p:
+        mo = moe_sorted(
+            h, p["moe"], num_experts=cfg.num_experts,
+            top_k=cfg.num_experts_per_tok, act=act_fn(cfg.activation),
+            capacity_factor=cfg.moe_capacity_factor,
+            shared=p["moe"].get("shared"),
+            groups=cfg.moe_groups,
+        )
+        x = x + mo.y
+    else:
+        x = x + apply_mlp(p["mlp"], cfg, h)
+    return x, cache

@@ -1,0 +1,5 @@
+from repro.resilience.checkpoint import CheckpointManager
+from repro.resilience.voting import ReplicaVoter
+from repro.resilience.elastic import reshard_state
+
+__all__ = ["CheckpointManager", "ReplicaVoter", "reshard_state"]

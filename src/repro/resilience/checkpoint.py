@@ -1,0 +1,117 @@
+"""Stop-and-go checkpointing (paper resilience feature 5, scaled up).
+
+Properties required for thousands of nodes and delivered here:
+  * **atomic**: write to a temp dir, fsync, single rename — a power loss
+    mid-write never corrupts the latest checkpoint (the paper's "irregular
+    and short power cycles");
+  * **versioned**: N newest checkpoints retained; restore takes the newest
+    *complete* one;
+  * **sharding-agnostic**: leaves are saved as host numpy per name, so a
+    restart may reshard onto a different mesh (elastic re-scale);
+  * **complete**: train state + data-pipeline state + VM state + metadata
+    are one unit, so a restore resumes byte-exactly (tested);
+  * **background**: serialization runs off-thread; the train loop only
+    blocks on the previous save.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.tree import tree_flatten_with_names
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             blocking: bool = True) -> Path:
+        """Snapshot ``tree`` (any pytree of arrays) + json-able ``extra``."""
+        # Materialize on host before handing to the writer thread.
+        named = [
+            (name, np.asarray(leaf))
+            for name, leaf in tree_flatten_with_names(jax.device_get(tree))
+        ]
+        self.wait()
+        target = self.dir / f"ckpt_{step:010d}"
+
+        def write():
+            tmp = self.dir / f".tmp_{step:010d}_{os.getpid()}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **{n: a for n, a in named})
+            meta = {"step": step, "time": time.time(), "extra": extra or {}}
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            # fsync the payload then atomically publish.
+            for f in tmp.iterdir():
+                with open(f, "rb") as fh:
+                    os.fsync(fh.fileno())
+            if target.exists():
+                shutil.rmtree(target)
+            tmp.rename(target)
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+        return target
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("ckpt_*"))
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("ckpt_*"))
+        for c in reversed(ckpts):
+            if (c / "meta.json").exists():   # complete checkpoints only
+                return int(c.name.split("_")[1])
+        return None
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template`` (shape/dtype authority),
+        resharding leaves onto the template's shardings if present."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"ckpt_{step:010d}"
+        meta = json.loads((path / "meta.json").read_text())
+        arrays = np.load(path / "arrays.npz")
+        names = [n for n, _ in tree_flatten_with_names(template)]
+        leaves_t = jax.tree.leaves(template)
+        new_leaves = []
+        for name, t in zip(names, leaves_t):
+            a = arrays[name]
+            if hasattr(t, "dtype"):
+                a = a.astype(t.dtype)
+            sharding = getattr(t, "sharding", None)
+            if sharding is not None and hasattr(sharding, "mesh"):
+                new_leaves.append(jax.device_put(a, sharding))
+            else:
+                new_leaves.append(jax.numpy.asarray(a) if hasattr(t, "dtype") else a)
+        tree = jax.tree.unflatten(jax.tree.structure(template), new_leaves)
+        return tree, meta["extra"]

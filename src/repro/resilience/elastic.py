@@ -1,0 +1,24 @@
+"""Elastic re-mesh: restart a job on a different device count.
+
+Checkpoints are sharding-agnostic (name -> host numpy), so re-scaling is a
+restore with new shardings.  ``reshard_state`` also handles the live path
+(device-to-device) for planned scale-downs: gather to host, re-put under the
+new mesh's shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def reshard_state(tree: Any, shardings_tree: Any) -> Any:
+    """Move every leaf onto the matching sharding (host round-trip)."""
+    host = jax.device_get(tree)
+
+    def put(x, s):
+        return jax.device_put(np.asarray(x), s)
+
+    return jax.tree.map(put, host, shardings_tree)

@@ -1,0 +1,250 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = global_FLOPs      / (chips * 197e12  bf16 FLOP/s)
+    memory     = global_HBM_bytes  / (chips * 819e9   B/s)
+    collective = per-chip collective bytes / 50e9 B/s per ICI link
+
+``compiled.cost_analysis()`` operates on the SPMD-partitioned per-device
+module, so reported flops/bytes are per-chip; global = per-chip * chips, and
+the chips cancel in the compute/memory terms.  Collective bytes are not in
+cost_analysis — they are parsed from the (partitioned) HLO text by summing
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per-chip link traffic).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class hardware constants (per assignment)."""
+
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `f32[128,1024]{1,0}` or `bf16[]` (scalar)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    if not dims:
+        return nb
+    return nb * int(np.prod([int(d) for d in dims.split(",")], dtype=np.int64))
+
+
+_OP_RE = re.compile(
+    r"= (?P<types>[^=]*?)\s"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict[str, int]:
+    """Per-chip collective *operand* bytes, summed per collective kind.
+
+    Post-SPMD HLO does not repeat operand types inline, so operand size is
+    derived from the output type and the collective's semantics:
+      all-reduce / all-to-all / collective-permute: operand == output
+      all-gather:     operand = output / group_size (local shard)
+      reduce-scatter: operand = output * group_size (full tensor)
+    Async -start forms return a tuple (operand, output): the first shape
+    token is used directly.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group("kind")
+        shapes = _SHAPE_RE.findall(m.group("types"))
+        if not shapes:
+            continue
+        g = _group_size(line)
+        if len(shapes) > 1:
+            # tuple type of an async start: (operand, result, ...)
+            total = _shape_bytes(*shapes[0])
+        else:
+            nbytes = _shape_bytes(*shapes[0])
+            if kind == "all-gather":
+                total = nbytes // max(g, 1)
+            elif kind == "reduce-scatter":
+                total = nbytes * g
+            else:
+                total = nbytes
+        out[kind] += total
+    return out
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)? \(.*\) -> .* \{")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def collective_bytes_scaled(hlo: str, loop_trip: int) -> dict[str, int]:
+    """Per-chip collective operand bytes with while-body scaling.
+
+    XLA emits collectives inside a scan's while-body computation ONCE; for a
+    layer-stacked model those run ``loop_trip`` (= num_layers) times per
+    step.  This parser attributes each collective to its computation and
+    multiplies while-body collectives by the trip count (we only build
+    layer scans with collectives inside, so one trip count suffices —
+    validated in tests/test_roofline.py)."""
+    body_names: set[str] = set()
+    for m in _WHILE_BODY_RE.finditer(hlo):
+        body_names.add(m.group(1))
+    out = {k: 0 for k in _COLLECTIVES}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        mc = _COMPUTATION_RE.match(stripped)
+        if mc and stripped.endswith("{"):
+            current = mc.group(1)
+            continue
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group("kind")
+        shapes = _SHAPE_RE.findall(m.group("types"))
+        if not shapes:
+            continue
+        g = _group_size(line)
+        if len(shapes) > 1:
+            total = _shape_bytes(*shapes[0])
+        else:
+            nbytes = _shape_bytes(*shapes[0])
+            if kind == "all-gather":
+                total = nbytes // max(g, 1)
+            elif kind == "reduce-scatter":
+                total = nbytes * g
+            else:
+                total = nbytes
+        mult = loop_trip if (current in body_names) else 1
+        out[kind] += total * mult
+    return out
+
+
+def summarize_cost(cost) -> dict:
+    """Normalize compiled.cost_analysis() output (dict or list of dicts)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    keys = {
+        "flops": "flops",
+        "bytes accessed": "bytes",
+        "transcendentals": "transcendentals",
+        "optimal_seconds": "optimal_seconds",
+    }
+    out = {}
+    for k, name in keys.items():
+        if k in cost:
+            out[name] = float(cost[k])
+    # Operand/output byte details when present.
+    out["bytes_detail"] = {
+        k: float(v) for k, v in cost.items() if k.startswith("bytes accessed")
+    }
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only), N = active
+    non-embedding params (MoE: top-k routed + shared)."""
+    from repro.models.counting import active_param_count, embedding_param_count
+
+    n = active_param_count(cfg) - embedding_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms_from(
+    flops_global: float,
+    bytes_global: float,
+    coll_per_chip: float,
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh_cfg: MeshConfig,
+    hw: HW = HW(),
+) -> dict:
+    chips = mesh_cfg.num_devices
+    compute_s = flops_global / chips / hw.peak_flops
+    memory_s = bytes_global / chips / hw.hbm_bw
+    collective_s = coll_per_chip / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / flops_global if flops_global else 0.0
+    # Roofline fraction: time for the useful model flops at peak vs the
+    # dominant term (the score the perf loop drives up).
+    dominant_s = terms[bottleneck]
+    frac = (mf / chips / hw.peak_flops) / dominant_s if dominant_s > 0 else 0.0
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "flops_global": flops_global,
+        "useful_flops_ratio": float(f"{useful:.4g}"),
+        "roofline_fraction": float(f"{frac:.4g}"),
+    }
+
+
+def roofline_terms(
+    cost: dict,
+    coll: dict[str, int],
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh_cfg: MeshConfig,
+    hw: HW = HW(),
+) -> dict:
+    """HLO-based terms (per-chip cost_analysis; while-loop undercount caveat
+    applies — see analytic.py)."""
+    chips = mesh_cfg.num_devices
+    return roofline_terms_from(
+        cost.get("flops", 0.0) * chips,
+        cost.get("bytes", 0.0) * chips,
+        float(sum(coll.values())),
+        cfg, shape, mesh_cfg, hw,
+    )

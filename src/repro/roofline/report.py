@@ -1,0 +1,106 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run artifact.
+
+    PYTHONPATH=src python -m repro.roofline.report artifacts/dryrun/dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in [("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)]:
+        if x >= div:
+            return f"{x/div:.2f} {unit}"
+    return f"{x:.0f} B"
+
+
+def dryrun_table(records: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | mem/chip (args+temp) | HLO flops/chip | coll bytes/chip | compile |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | — |"
+            )
+            continue
+        m = r["memory"]
+        mem = m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+        coll = sum(r["collective_bytes"].values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_b(mem)} | "
+            f"{r['cost'].get('flops', 0):.2e} | {fmt_b(coll)} | "
+            f"{r.get('compile_s', 0):.0f}s |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(records: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} | — | — | — |"
+            )
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['bottleneck'].replace('_s','')}** | "
+            f"{rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(records: list[dict]) -> list[dict]:
+    """worst roofline fraction / most collective-bound / most representative."""
+    ok = [r for r in records if r["status"] == "ok" and r["mesh"] == "16x16"]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(sum(r["roofline"][k] for k in ("compute_s", "memory_s", "collective_s")), 1e-30))
+    return [worst, coll]
+
+
+def main(argv=None):
+    path = Path((argv or sys.argv[1:])[0]) if (argv or sys.argv[1:]) else Path(
+        "artifacts/dryrun/dryrun.json"
+    )
+    records = json.loads(path.read_text())
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Dry-run — {mesh}\n")
+        print(dryrun_table(records, mesh))
+    print("\n### Roofline — 16x16 (single pod, per assignment)\n")
+    print(roofline_table(records, "16x16"))
+    w, c = pick_hillclimb(records)
+    print(f"\nworst roofline fraction: {w['arch']} x {w['shape']} "
+          f"({w['roofline']['roofline_fraction']})")
+    print(f"most collective-bound:   {c['arch']} x {c['shape']} "
+          f"(coll {fmt_s(c['roofline']['collective_s'])})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.sched.lsa import (
+    Job,
+    LSAScheduler,
+    EnergyModel,
+)
+
+__all__ = ["Job", "LSAScheduler", "EnergyModel"]

@@ -1,0 +1,25 @@
+from repro.sharding.api import (
+    logical,
+    logical_rules,
+    current_rules,
+    LogicalRules,
+)
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    make_rules,
+    param_partition_spec,
+    param_pspec_tree,
+    batch_pspec,
+)
+
+__all__ = [
+    "logical",
+    "logical_rules",
+    "current_rules",
+    "LogicalRules",
+    "DEFAULT_RULES",
+    "make_rules",
+    "param_partition_spec",
+    "param_pspec_tree",
+    "batch_pspec",
+]

@@ -1,0 +1,88 @@
+"""Logical-axis sharding constraints.
+
+Model code annotates activations with *logical* axis names
+(``logical(x, "batch", "seq", "embed")``); a ``logical_rules`` context binds
+those names to mesh axes.  Outside any context the annotation is a no-op, so
+the same model code runs single-device smoke tests and 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class LogicalRules:
+    mesh: Mesh
+    # logical axis name -> mesh axis (str), tuple of mesh axes, or None
+    mapping: dict[str, object] = field(default_factory=dict)
+
+    def spec_for(self, names: tuple) -> P:
+        axes = []
+        used: set = set()
+        for n in names:
+            if n is None:
+                axes.append(None)
+                continue
+            m = self.mapping.get(n)
+            # A mesh axis may shard only one tensor dim; later duplicates
+            # fall back to replication.
+            if m is None:
+                axes.append(None)
+            else:
+                ms = (m,) if isinstance(m, str) else tuple(m)
+                ms = tuple(a for a in ms if a not in used)
+                if not ms:
+                    axes.append(None)
+                else:
+                    used.update(ms)
+                    axes.append(ms if len(ms) > 1 else ms[0])
+        return P(*axes)
+
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Optional[LogicalRules]):
+    prev = current_rules()
+    _local.rules = rules
+    try:
+        yield
+    finally:
+        _local.rules = prev
+
+
+def logical(x: jax.Array, *names) -> jax.Array:
+    """Apply a sharding constraint from logical axis names (no-op when no
+    rules are active).  Axes whose dim is not divisible by the mesh axis
+    fall back to replication (e.g. whisper's 6 heads on a 16-way axis)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    spec = rules.spec_for(names)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        fixed.append(ax if dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed))
+    )

@@ -1,0 +1,206 @@
+"""Sharding rules: logical axes -> mesh axes, and name-based parameter
+partition specs (DP / FSDP / TP / EP / SP).
+
+Activation rules (used by ``logical()`` constraints in model code):
+  batch    -> (pod, data)      data parallelism (hierarchical across pods)
+  seq      -> data for batch=1 long-context decode (sequence parallelism)
+  embed    -> None (replicated activations within a shard)
+  ff/heads/kv_heads/expert/vocab -> model (tensor/expert parallelism)
+
+Parameter rules are name-pattern based over the flattened param tree;
+``fsdp`` additionally shards the largest replicated dim over "data"
+(ZeRO-3 style) — required for granite-34b-scale optimizer state.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+from repro.sharding.api import LogicalRules
+
+
+def make_rules(
+    mesh: Mesh,
+    mesh_cfg: MeshConfig,
+    *,
+    seq_sharding: bool = False,
+    act_seq: bool = False,
+    kv_cache_layout: dict | None = None,
+    preset: str = "tp_sp",
+) -> LogicalRules:
+    dp = tuple(mesh_cfg.dp_axes)
+    if preset == "dp":
+        # Pure (FS)DP: every mesh axis carries batch; no tensor parallelism.
+        all_axes = tuple(mesh_cfg.axis_names)
+        mapping = {
+            "batch": all_axes,
+            "seq": None,
+            "act_seq": None,
+            "embed": None, "ff": None, "heads": None, "kv_heads": None,
+            "expert": None, "vocab": None,
+            "cache_batch": None, "kv_seq": None, "cache_kv": None,
+        }
+        if kv_cache_layout:
+            mapping.update(kv_cache_layout)
+        return LogicalRules(mesh=mesh, mapping=mapping)
+    mapping = {
+        "batch": dp if len(dp) > 1 else dp[0],
+        "seq": "data" if seq_sharding else None,
+        # Megatron-style sequence parallelism: residual-stream activations
+        # (esp. the per-layer remat stash) shard their seq dim over "model";
+        # XLA inserts the all-gather before attention/MLP and the
+        # reduce-scatter after.  Disabled by the "tp" preset.
+        "act_seq": "model" if (act_seq and preset == "tp_sp") else None,
+        "embed": None,
+        "ff": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "vocab": "model",
+        # decode cache axes: bound per-cell by build_decode
+        "cache_batch": None,
+        "kv_seq": None,
+        "cache_kv": None,
+    }
+    if kv_cache_layout:
+        mapping.update(kv_cache_layout)
+    return LogicalRules(mesh=mesh, mapping=mapping)
+
+
+DEFAULT_RULES = make_rules  # alias documented in DESIGN.md
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (name-based)
+# ---------------------------------------------------------------------------
+
+# (regex, spec builder) — first match wins.  ``L`` marks the stacked layer
+# axis (never sharded).  Specs are written for the *trailing* dims; the
+# builder pads leading axes with None.
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding: vocab on model
+    (r"embed/tokens$", ("vocab@model", "embed")),
+    (r"lm_head$", ("embed", "vocab@model")),
+    # attention projections: head dim on model
+    (r"attn/wq$", ("embed", "heads@model")),
+    (r"attn/wk$", ("embed", "kv@model")),
+    (r"attn/wv$", ("embed", "kv@model")),
+    (r"attn/wo$", ("heads@model", "embed")),
+    (r"xattn/w[qkvo]$", ("embed", "heads@model")),
+    # MoE: experts on model (EP)
+    (r"moe/router$", ("embed", None)),
+    (r"moe/w[13]$", ("expert@model", "embed", None)),
+    (r"moe/w2$", ("expert@model", None, "embed")),
+    (r"moe/shared/w[13]$", ("embed", "ff@model")),
+    (r"moe/shared/w2$", ("ff@model", "embed")),
+    # dense MLP: ff on model (megatron col->row)
+    (r"(mlp|chan)/w[13k]$", ("embed", "ff@model")),
+    (r"(mlp|chan)/w[2v]$", ("ff@model", "embed")),
+    (r"chan/wr$", ("embed", "ff@model")),
+    # rwkv6 time-mix square projections: output dim on model
+    (r"time/w[rkvg]$", ("embed", "heads@model")),
+    (r"time/wo$", ("heads@model", "embed")),
+    (r"time/wa$", ("embed", None)),
+    (r"time/wb$", (None, "embed")),
+    # mamba2 (separate projections; z/x shard the inner dim, B/C/dt small)
+    (r"mamba/w[zx]$", ("embed", "ff@model")),
+    (r"mamba/out_proj$", ("ff@model", "embed")),
+    # zamba2 shared block
+    (r"shared/proj_in$", ("embed", None)),
+    (r"vision_proj/w[12]$", ("embed", None)),
+]
+
+
+def _base_spec(name: str, ndim: int) -> list:
+    # Quantized leaves: ".../wq/q" shards like ".../wq"; the 1-D scale
+    # vector ".../wq/s" shards like the base weight's output dim.
+    if name.endswith("/q"):
+        name = name[:-2]
+    elif name.endswith("/s"):
+        base = _base_spec(name[:-2], 2)
+        return [None] * (ndim - 1) + [base[-1]]
+    for pat, trailing in _RULES:
+        if re.search(pat, name):
+            spec = [None] * ndim
+            for k, ax in enumerate(reversed(trailing)):
+                if ax is None or "@" not in str(ax):
+                    continue
+                spec[ndim - 1 - k] = ax.split("@")[1]
+            return spec
+    return [None] * ndim
+
+
+def param_partition_spec(
+    name: str,
+    shape: tuple,
+    mesh_cfg: MeshConfig,
+    *,
+    fsdp: bool = False,
+    fsdp_min_size: int = 2**18,
+    preset: str = "tp_sp",
+) -> P:
+    """Partition spec for one named parameter."""
+    ndim = len(shape)
+    if preset == "dp":
+        # Pure FSDP: shard the largest dim over as many axes as divide it.
+        spec = [None] * ndim
+        if int(np.prod(shape)) >= fsdp_min_size:
+            axis_pools = [
+                tuple(mesh_cfg.axis_names),          # all axes
+                ("data", "model"),
+                ("data",),
+                ("model",),
+            ]
+            sizes = {"pod": mesh_cfg.pods, "data": mesh_cfg.data,
+                     "model": mesh_cfg.model}
+            order = sorted(range(ndim), key=lambda i: -shape[i])
+            for pool in axis_pools:
+                n = int(np.prod([sizes[a] for a in pool]))
+                for i in order:
+                    if shape[i] % n == 0:
+                        spec[i] = pool if len(pool) > 1 else pool[0]
+                        return P(*spec)
+        return P(*spec)
+    spec = _base_spec(name, ndim)
+    # Never shard dims not divisible by the mesh axis.
+    for i, ax in enumerate(spec):
+        if ax == "model" and shape[i] % mesh_cfg.model != 0:
+            spec[i] = None
+    if fsdp and int(np.prod(shape)) >= fsdp_min_size:
+        # Shard the largest still-unsharded dim over "data" (ZeRO-3).
+        cand = [
+            (shape[i], i) for i in range(ndim)
+            if spec[i] is None and shape[i] % mesh_cfg.data == 0
+        ]
+        if cand:
+            _, i = max(cand)
+            spec[i] = "data"
+    return P(*spec)
+
+
+def param_pspec_tree(param_shapes, mesh_cfg: MeshConfig, *, fsdp: bool = False,
+                     preset: str = "tp_sp"):
+    """Tree of PartitionSpecs matching a tree of ShapeDtypeStructs."""
+    from repro.utils.tree import tree_map_with_names
+
+    return tree_map_with_names(
+        lambda name, x: param_partition_spec(
+            name, x.shape, mesh_cfg, fsdp=fsdp, preset=preset
+        ),
+        param_shapes,
+    )
+
+
+def batch_pspec(mesh_cfg: MeshConfig, *, seq_sharding: bool = False) -> P:
+    """Spec for (B, S, ...) token batches."""
+    dp = mesh_cfg.dp_axes
+    b = dp if len(dp) > 1 else dp[0]
+    if seq_sharding:
+        # batch=1 long-context: shard the sequence dim instead.
+        return P(None, "data")
+    return P(b, None)

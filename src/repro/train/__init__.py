@@ -1,0 +1,25 @@
+from repro.train.optimizer import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    lr_schedule,
+)
+from repro.train.train_step import (
+    loss_fn,
+    make_train_step,
+    TrainState,
+    init_train_state,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "make_optimizer",
+    "lr_schedule",
+    "loss_fn",
+    "make_train_step",
+    "TrainState",
+    "init_train_state",
+]

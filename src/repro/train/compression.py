@@ -1,0 +1,67 @@
+"""Gradient compression — the paper's fixed-point scale-vector scheme (C4)
+applied to the data-parallel gradient reduction.
+
+Int8 symmetric quantization with one fp32 scale per parameter block
+("scale vector" over blocks), simulating the compressed all-reduce: under
+pjit the quantize -> (all-reduce happens on the int8 tensor when sharded)
+-> dequantize pattern reduces DP reduction bytes ~4x vs fp32.
+
+An error-feedback variant (EF21-style) keeps the quantization residual in
+the optimizer loop so compression noise does not accumulate; the residual
+memory lives with the caller (see tests/test_train.py for the convergence
+property test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _quant_block(g: jnp.ndarray):
+    """Per-block int8 quantization of a flat fp32 vector."""
+    n = g.shape[0]
+    pad = (-n) % BLOCK
+    gp = jnp.pad(g, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(gp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(gp / scale), -128, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def _dequant_block(q, scale, n):
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+
+
+def compress_decompress_grads(grads):
+    """Quantize+dequantize every gradient leaf (the lossy channel)."""
+
+    def cd(g):
+        flat = g.reshape(-1).astype(jnp.float32)
+        q, s, n = _quant_block(flat)
+        return _dequant_block(q, s, n).reshape(g.shape)
+
+    return jax.tree.map(cd, grads)
+
+
+def compress_decompress_with_feedback(grads, residual):
+    """EF21-style error feedback: channel(g + e) with e updated to the
+    quantization error.  Returns (decompressed, new_residual)."""
+
+    def cd(g, e):
+        x = g.astype(jnp.float32) + e
+        flat = x.reshape(-1)
+        q, s, n = _quant_block(flat)
+        y = _dequant_block(q, s, n).reshape(g.shape)
+        return y, x - y
+
+    out = jax.tree.map(cd, grads, residual)
+    dec = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return dec, res
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

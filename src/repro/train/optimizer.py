@@ -1,0 +1,146 @@
+"""Optimizers in pure JAX (no optax in this environment).
+
+AdamW with fp32 moments + decoupled weight decay, Lion, and plain SGD; cosine
+/ linear / constant LR schedules with linear warmup; global-norm clipping.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.utils.tree import tree_global_norm
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any            # first moment (fp32), zeros tree for sgd/lion m-only
+    v: Any            # second moment (fp32), empty for lion/sgd
+
+
+def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.lr_schedule == "constant":
+        decay = 1.0
+    elif cfg.lr_schedule == "linear":
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+        )
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _f32_zeros_like(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def adamw_init(params) -> OptState:
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=_f32_zeros_like(params),
+        v=_f32_zeros_like(params),
+    )
+
+
+def adamw_update(cfg: TrainConfig, params, grads, opt: OptState):
+    """Returns (new_params, new_opt, metrics).  Grads may be any float dtype;
+    moments and update math are fp32; params keep their dtype."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }
+
+
+def lion_init(params) -> OptState:
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=_f32_zeros_like(params),
+        v=jnp.zeros((), jnp.float32),  # unused
+    )
+
+
+def lion_update(cfg: TrainConfig, params, grads, opt: OptState):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(p, g, m):
+        update = jnp.sign(b1 * m + (1 - b1) * g)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * update
+        m2 = b2 * m + (1 - b2) * g
+        return newp.astype(p.dtype), m2
+
+    out = jax.tree.map(upd, params, grads, opt.m)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_m, v=opt.v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }
+
+
+def sgd_init(params) -> OptState:
+    return OptState(step=jnp.zeros((), jnp.int32), m=jnp.zeros((), jnp.float32), v=jnp.zeros((), jnp.float32))
+
+
+def sgd_update(cfg: TrainConfig, params, grads, opt: OptState):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype), params, grads
+    )
+    return new_params, OptState(step=step, m=opt.m, v=opt.v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }
+
+
+def make_optimizer(cfg: TrainConfig):
+    if cfg.optimizer == "adamw":
+        return adamw_init, adamw_update
+    if cfg.optimizer == "lion":
+        return lion_init, lion_update
+    if cfg.optimizer == "sgd":
+        return sgd_init, sgd_update
+    raise ValueError(cfg.optimizer)

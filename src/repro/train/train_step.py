@@ -1,0 +1,115 @@
+"""Loss + train step: cross-entropy with z-loss, router aux loss, gradient
+accumulation (microbatching), and optional int8 error-feedback gradient
+compression on the data-parallel reduction (paper C4 applied to gradients).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.train.compression import compress_decompress_grads
+from repro.train.optimizer import make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    rng: jnp.ndarray
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, train_cfg: TrainConfig, key) -> TrainState:
+    params = model.init(key)
+    opt_init, _ = make_optimizer(train_cfg)
+    return TrainState(
+        params=params,
+        opt=opt_init(params),
+        rng=jax.random.key_data(jax.random.key(train_cfg.seed)),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def loss_fn(model: Model, train_cfg: TrainConfig, params, batch):
+    """Next-token CE in fp32 with z-loss + MoE aux loss."""
+    logits, aux = model.forward(params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # standard causal LM shift: predict labels[t] from logits[t]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum((logz - gold) * mask) / ntok
+    zl = jnp.sum(jnp.square(logz) * mask) / ntok
+    total = ce + train_cfg.z_loss * zl + model.cfg.router_aux_loss_coef * aux
+    return total, {"ce": ce, "z_loss": zl, "aux": aux}
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig):
+    """Build the jittable train step.
+
+    With ``train_cfg.microbatches > 1`` the global batch is split along axis
+    0 and gradients are accumulated in fp32 under a lax.scan — the collective
+    reduction of microbatch i overlaps the forward of i+1 under XLA's latency
+    hiding scheduler (DESIGN.md §Distribution tricks).
+    """
+    _, opt_update = make_optimizer(train_cfg)
+    n_micro = train_cfg.microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, train_cfg, p, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if n_micro == 1:
+            loss, metrics, grads = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch,
+            )
+
+            def acc_fn(carry, mb):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return (acc, loss_acc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), metrics = lax.scan(
+                acc_fn, (zeros, jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        if train_cfg.grad_compression == "int8_ef":
+            grads = compress_decompress_grads(grads)
+
+        new_params, new_opt, opt_metrics = opt_update(
+            train_cfg, params, grads, state.opt
+        )
+        metrics = dict(metrics) | dict(opt_metrics) | {"loss": loss}
+        new_state = TrainState(
+            params=new_params,
+            opt=new_opt,
+            rng=state.rng,
+            step=state.step + 1,
+        )
+        return new_state, metrics
+
+    return train_step

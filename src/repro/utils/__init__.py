@@ -1,0 +1,16 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_num_params,
+    tree_flatten_with_names,
+    tree_map_with_names,
+)
+from repro.utils.timing import Timer, timed
+
+__all__ = [
+    "tree_size_bytes",
+    "tree_num_params",
+    "tree_flatten_with_names",
+    "tree_map_with_names",
+    "Timer",
+    "timed",
+]

@@ -1,0 +1,63 @@
+"""Wall-clock timing helpers for benchmarks and the trainer."""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Timer:
+    """Accumulating timer with per-lap statistics."""
+
+    laps: list[float] = field(default_factory=list)
+    _t0: float | None = None
+
+    def start(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def stop(self) -> float:
+        assert self._t0 is not None, "Timer.stop() before start()"
+        dt = time.perf_counter() - self._t0
+        self.laps.append(dt)
+        self._t0 = None
+        return dt
+
+    @property
+    def total(self) -> float:
+        return sum(self.laps)
+
+    @property
+    def mean(self) -> float:
+        return self.total / len(self.laps) if self.laps else 0.0
+
+    @property
+    def best(self) -> float:
+        return min(self.laps) if self.laps else 0.0
+
+
+@contextlib.contextmanager
+def timed(timer: Timer):
+    timer.start()
+    try:
+        yield timer
+    finally:
+        timer.stop()
+
+
+def bench(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Return best-of-``iters`` seconds for ``fn(*args)`` (block_until_ready aware)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t = Timer()
+    for _ in range(iters):
+        t.start()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t.stop()
+    return t.best

@@ -1,0 +1,77 @@
+"""Pytree utilities used across the framework (no flax/optax available)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_nbytes(x: Any) -> int:
+    if hasattr(x, "nbytes"):
+        return int(x.nbytes)
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return int(np.prod(x.shape, dtype=np.int64)) * np.dtype(x.dtype).itemsize
+    return 0
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes across all array leaves (works on ShapeDtypeStruct too)."""
+    return sum(_leaf_nbytes(x) for x in jax.tree.leaves(tree))
+
+
+def tree_num_params(tree: Any) -> int:
+    """Total element count across all array leaves."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape"):
+            total += int(np.prod(x.shape, dtype=np.int64))
+    return total
+
+
+def _name_of_path(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree into (slash/separated/name, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_name_of_path(path), leaf) for path, leaf in flat]
+
+
+def tree_map_with_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(name, leaf) -> leaf`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_name_of_path(path), leaf), tree
+    )
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    """Cast all inexact leaves to ``dtype``."""
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_global_norm(tree: Any) -> jax.Array:
+    """Global L2 norm over all leaves (fp32 accumulation)."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,171 @@
+"""Fixed-point numerics tests — validates the paper's accuracy claims
+(Fig. 11: sigmoid <1 % error; log10 LUT) and scale-vector semantics."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import (
+    LOG10_LUT,
+    SGLUT13,
+    SGLUT310,
+    apply_scale,
+    apply_scale_jnp,
+    dequantize,
+    fplog10,
+    fplog10_jnp,
+    fpsigmoid,
+    fpsigmoid_jnp,
+    fpsin,
+    fpsin_jnp,
+    fpsqrt,
+    fpsqrt_jnp,
+    quantize_per_channel,
+)
+
+
+class TestLUTConstruction:
+    def test_paper_lut_sizes(self):
+        # Paper Alg. 2: "24 values" and "6 elements"; log10lut ~100 values.
+        assert SGLUT13.shape[0] == 24
+        assert SGLUT310.shape[0] == 6
+        assert LOG10_LUT.shape[0] == 90
+
+    def test_log10_lut_values(self):
+        assert LOG10_LUT[0] == 0                    # log10(1.0)=0
+        assert LOG10_LUT[90 - 10 - 1] * 0.01 == pytest.approx(math.log10(8.9), abs=0.01)
+
+
+class TestSigmoidAccuracy:
+    def test_faithful_error_envelope(self):
+        """Reproduction finding (EXPERIMENTS.md): the paper claims <1 % error
+        (Fig. 11) but Alg. 2/3 as published measures 2.2 % worst-case (the
+        6-entry [3,10) segment is too coarse).  We pin the measured envelope
+        of the faithful implementation: <1 % on |x|<=1 (linear segment),
+        <2.5 % globally."""
+        worst_global, worst_seg1 = 0.0, 0.0
+        for x in np.arange(-12000, 12001, 7):
+            approx = fpsigmoid(int(x)) / 1000.0
+            exact = 1.0 / (1.0 + math.exp(-x / 1000.0))
+            e = abs(approx - exact)
+            worst_global = max(worst_global, e)
+            if abs(x) <= 1000:
+                worst_seg1 = max(worst_seg1, e)
+        assert worst_seg1 < 0.01
+        assert worst_global < 0.025
+
+    def test_improved_meets_paper_claim(self):
+        """Beyond-paper interpolated LUT achieves the paper's <1 % target."""
+        from repro.core.fixedpoint import fpsigmoid_interp, fpsigmoid_interp_jnp
+
+        worst = 0.0
+        xs = np.arange(-12000, 12001, 7)
+        for x in xs:
+            approx = fpsigmoid_interp(int(x)) / 1000.0
+            exact = 1.0 / (1.0 + math.exp(-x / 1000.0))
+            worst = max(worst, abs(approx - exact))
+        assert worst < 0.01, f"improved sigmoid error {worst:.4f} >= 1%"
+        # jnp path bit-exact vs scalar
+        ref = np.array([fpsigmoid_interp(int(x)) for x in xs])
+        got = np.asarray(fpsigmoid_interp_jnp(jnp.asarray(xs.astype(np.int32))))
+        assert np.array_equal(ref, got)
+
+    def test_symmetry(self):
+        for x in [0, 123, 999, 1500, 2500, 5000, 9999, 20000]:
+            assert fpsigmoid(x) + fpsigmoid(-x) == 1000
+
+    def test_saturation(self):
+        assert fpsigmoid(10000) == 1000
+        assert fpsigmoid(-10000) == 0
+
+    def test_jnp_matches_scalar(self):
+        xs = np.arange(-12000, 12001, 13).astype(np.int32)
+        ref = np.array([fpsigmoid(int(x)) for x in xs])
+        got = np.asarray(fpsigmoid_jnp(jnp.asarray(xs)))
+        assert np.array_equal(ref, got)
+
+
+class TestLog10:
+    def test_known_values(self):
+        assert fplog10(10) == 0        # log10(1.0)
+        assert fplog10(100) == 100     # log10(10.0)
+        assert fplog10(1000) == 200
+        assert abs(fplog10(20) - 30) <= 1
+
+    def test_jnp_matches_scalar(self):
+        xs = np.arange(10, 99999, 37).astype(np.int32)
+        ref = np.array([fplog10(int(x)) for x in xs])
+        got = np.asarray(fplog10_jnp(jnp.asarray(xs)))
+        assert np.array_equal(ref, got)
+
+    def test_error_bound(self):
+        # Intrinsic quantization of the normalize-by-10 scheme plus LUT int
+        # truncation: worst case ~0.044 log10 units (measured; bench_lut.py).
+        for x in range(10, 5000, 11):
+            approx = fplog10(x) / 100.0
+            exact = math.log10(x / 10.0)
+            assert abs(approx - exact) < 0.045, x
+
+
+class TestSinSqrt:
+    def test_sin_range(self):
+        for x in range(-7000, 7000, 97):
+            approx = fpsin(x) / 1000.0
+            exact = math.sin(x / 1000.0)
+            assert abs(approx - exact) < 0.02
+
+    def test_sin_jnp_matches(self):
+        xs = np.arange(-7000, 7000, 31).astype(np.int32)
+        ref = np.array([fpsin(int(x)) for x in xs])
+        got = np.asarray(fpsin_jnp(jnp.asarray(xs)))
+        assert np.array_equal(ref, got)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_sqrt_exact(self, x):
+        r = fpsqrt(x)
+        assert r * r <= x < (r + 1) * (r + 1)
+
+    def test_sqrt_jnp_matches(self):
+        xs = np.array([0, 1, 2, 3, 4, 15, 16, 17, 1 << 20, (1 << 31) - 1], np.int32)
+        ref = np.array([fpsqrt(int(x)) for x in xs])
+        got = np.asarray(fpsqrt_jnp(jnp.asarray(xs)))
+        assert np.array_equal(ref, got)
+
+
+class TestScaleVectors:
+    @given(st.integers(-30000, 30000), st.integers(-16, 16))
+    @settings(max_examples=200, deadline=None)
+    def test_scalar_vs_jnp(self, v, s):
+        ref = apply_scale(v, s)
+        got = int(apply_scale_jnp(jnp.int32(v), jnp.int32(s)))
+        assert ref == got
+
+    def test_semantics(self):
+        assert apply_scale(100, 3) == 300       # positive expands
+        assert apply_scale(100, -4) == 25       # negative reduces
+        assert apply_scale(-100, -4) == -25     # truncation toward zero
+        assert apply_scale(100, 0) == 100       # zero disables
+
+
+class TestQuantization:
+    def test_roundtrip_error(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(64, 32)).astype(np.float32)
+        q, scale = quantize_per_channel(w, bits=8, axis=1)
+        back = np.asarray(dequantize(jnp.asarray(q), scale))
+        err = np.abs(back - w).max() / np.abs(w).max()
+        assert err < 0.02
+
+    def test_int16_tighter_than_int8(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(32, 32)).astype(np.float32)
+        q8, s8 = quantize_per_channel(w, bits=8, axis=0)
+        q16, s16 = quantize_per_channel(w, bits=16, axis=0)
+        e8 = np.abs(np.asarray(dequantize(q8, s8)) - w).max()
+        e16 = np.abs(np.asarray(dequantize(q16, s16)) - w).max()
+        assert e16 < e8

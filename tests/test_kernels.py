@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+
+Assignment requirement: "For each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py pure-jnp oracle."
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fixmatmul.fixmatmul import fixmatmul
+from repro.kernels.fixmatmul.ref import fixmatmul_ref
+from repro.kernels.fixmatmul.ops import quantize_weight, quantized_matmul
+from repro.kernels.flashattn.flashattn import flash_attention
+from repro.kernels.flashattn.ref import flash_attention_ref
+from repro.kernels.lutact.lutact import lut_sigmoid
+from repro.kernels.lutact.ref import lut_sigmoid_ref
+from repro.kernels.lutact.ops import fixed_sigmoid
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(42)
+
+
+class TestFixMatmul:
+    @pytest.mark.parametrize(
+        "M,K,N,bm,bn,bk",
+        [
+            (64, 64, 64, 64, 64, 64),
+            (128, 256, 64, 64, 64, 64),
+            (64, 128, 128, 32, 128, 32),
+            (256, 128, 256, 128, 128, 128),
+        ],
+    )
+    def test_matches_oracle(self, M, K, N, bm, bn, bk):
+        xq = RNG.integers(-127, 128, (M, K)).astype(np.int8)
+        wq = RNG.integers(-127, 128, (K, N)).astype(np.int8)
+        sx = RNG.uniform(1e-3, 0.1, M).astype(np.float32)
+        sw = RNG.uniform(1e-3, 0.1, N).astype(np.float32)
+        out = fixmatmul(
+            jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(sx), jnp.asarray(sw),
+            bm=bm, bn=bn, bk=bk, interpret=True,
+        )
+        ref = fixmatmul_ref(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(sx), jnp.asarray(sw))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+    @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+    def test_out_dtypes(self, out_dtype):
+        xq = RNG.integers(-127, 128, (64, 64)).astype(np.int8)
+        wq = RNG.integers(-127, 128, (64, 64)).astype(np.int8)
+        sx = np.full(64, 0.01, np.float32)
+        sw = np.full(64, 0.02, np.float32)
+        out = fixmatmul(
+            jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(sx), jnp.asarray(sw),
+            bm=64, bn=64, bk=64, out_dtype=out_dtype, interpret=True,
+        )
+        assert out.dtype == out_dtype
+
+    def test_quantized_linear_accuracy(self):
+        """End-to-end int8 linear ~1% relative error (paper C4 claim scale)."""
+        x = RNG.normal(size=(3, 17, 192)).astype(np.float32)
+        w = RNG.normal(size=(192, 120)).astype(np.float32)
+        wq, sw = quantize_weight(jnp.asarray(w))
+        y = quantized_matmul(jnp.asarray(x), wq, sw, bm=64, bn=64, bk=64)
+        rel = np.abs(np.asarray(y) - x @ w).max() / np.abs(x @ w).max()
+        assert rel < 0.03, rel
+
+
+class TestLutAct:
+    @pytest.mark.parametrize("shape", [(64, 128), (256, 256), (8, 512)])
+    def test_matches_oracle(self, shape):
+        x = RNG.integers(-15000, 15000, shape).astype(np.int32)
+        out = lut_sigmoid(jnp.asarray(x), bm=64, bn=128, interpret=True)
+        ref = lut_sigmoid_ref(jnp.asarray(x))
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_ragged_shapes_via_ops(self):
+        for shape in [(5,), (3, 50), (2, 3, 33)]:
+            x = RNG.integers(-12000, 12000, shape).astype(np.int32)
+            out = fixed_sigmoid(jnp.asarray(x))
+            ref = lut_sigmoid_ref(jnp.asarray(x))
+            assert np.array_equal(np.asarray(out), np.asarray(ref)), shape
+
+    def test_meets_paper_accuracy_target(self):
+        import math
+        xs = np.arange(-12000, 12001, 11).astype(np.int32)
+        out = np.asarray(fixed_sigmoid(jnp.asarray(xs))) / 1000.0
+        exact = 1.0 / (1.0 + np.exp(-xs / 1000.0))
+        assert np.abs(out - exact).max() < 0.01
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "B,H,KV,Sq,Sk,hd,causal,window",
+        [
+            (2, 4, 2, 128, 128, 32, True, None),
+            (1, 4, 4, 128, 128, 64, False, None),
+            (2, 8, 2, 256, 256, 32, True, 96),
+            (1, 2, 1, 64, 192, 32, False, None),    # MQA cross-attention
+            (1, 6, 6, 128, 128, 64, True, None),    # whisper-like MHA
+        ],
+    )
+    def test_matches_oracle(self, B, H, KV, Sq, Sk, hd, causal, window):
+        q = jnp.asarray(RNG.normal(size=(B, H, Sq, hd)).astype(np.float32)) * 0.5
+        k = jnp.asarray(RNG.normal(size=(B, KV, Sk, hd)).astype(np.float32)) * 0.5
+        v = jnp.asarray(RNG.normal(size=(B, KV, Sk, hd)).astype(np.float32)) * 0.5
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              bq=64, bk=64, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+    def test_bfloat16(self):
+        q = (jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)) * 0.5).astype(jnp.bfloat16)
+        k = (jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)) * 0.5).astype(jnp.bfloat16)
+        v = (jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)) * 0.5).astype(jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+        )
+
+
+class TestRwkv6Scan:
+    @pytest.mark.parametrize(
+        "B,H,S,K,chunk",
+        [(1, 2, 64, 16, 32), (2, 3, 128, 16, 64), (1, 1, 256, 32, 64)],
+    )
+    def test_matches_oracle(self, B, H, S, K, chunk):
+        def t(*s, scale=0.5):
+            return jnp.asarray(RNG.normal(size=s).astype(np.float32)) * scale
+
+        r, k, v = t(B, H, S, K), t(B, H, S, K), t(B, H, S, K)
+        logw = -jnp.exp(jnp.asarray(RNG.uniform(-6, -4, (B, H, S, K)).astype(np.float32)))
+        u = t(H, K)
+        s0 = t(B, H, K, K, scale=0.1)
+        out, s1 = rwkv6_scan(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+        ref_out, ref_s1 = rwkv6_scan_ref(r, k, v, logw, u, s0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(ref_s1), atol=1e-4)
+
+    def test_state_carry_chains(self):
+        """Running two halves with carried state == running the whole."""
+        def t(*s, scale=0.5):
+            return jnp.asarray(RNG.normal(size=s).astype(np.float32)) * scale
+
+        B, H, S, K = 1, 2, 128, 16
+        r, k, v = t(B, H, S, K), t(B, H, S, K), t(B, H, S, K)
+        logw = -jnp.exp(jnp.asarray(RNG.uniform(-6, -4, (B, H, S, K)).astype(np.float32)))
+        u = t(H, K)
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+        full, s_full = rwkv6_scan(r, k, v, logw, u, s0, chunk=32, interpret=True)
+        h1, s_mid = rwkv6_scan(r[:, :, :64], k[:, :, :64], v[:, :, :64],
+                               logw[:, :, :64], u, s0, chunk=32, interpret=True)
+        h2, s_end = rwkv6_scan(r[:, :, 64:], k[:, :, 64:], v[:, :, 64:],
+                               logw[:, :, 64:], u, s_mid, chunk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(full[:, :, 64:]), np.asarray(h2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_end), atol=1e-4)

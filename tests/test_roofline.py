@@ -1,0 +1,132 @@
+"""Roofline machinery tests.
+
+The critical one: the analytic FLOP model must agree with XLA's
+cost_analysis on configs where cost_analysis is trustworthy (no scans —
+layers unrolled via a 1-layer model, attention in one block, no remat).
+Plus HLO collective parsing units and hillclimb bookkeeping.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig, MeshConfig
+from repro.models import build_model
+from repro.roofline import analytic
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    summarize_cost,
+    model_flops,
+    roofline_terms_from,
+)
+
+
+def _hlo_flops(model, cfg, shape, kind):
+    """Compile on one device and read cost_analysis flops."""
+    if kind == "decode":
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        compiled = jax.jit(model.decode_step).lower(params, cache, tok).compile()
+    else:
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        batch = model.input_specs(shape)
+        compiled = jax.jit(lambda p, b: model.forward(p, b)[0]).lower(params, batch).compile()
+    return summarize_cost(compiled.cost_analysis()).get("flops", 0.0)
+
+
+class TestAnalyticFlopsVsHLO:
+    """1-layer models, no remat, single attention block: cost_analysis is
+    exact there, and the analytic model must be within 25%."""
+
+    @pytest.mark.parametrize(
+        "family,extra",
+        [
+            ("dense", {}),
+            ("moe", dict(num_experts=8, num_experts_per_tok=2, moe_d_ff=64,
+                         moe_capacity_factor=1.25)),
+        ],
+    )
+    def test_forward_flops(self, family, extra):
+        cfg = ModelConfig(
+            name="fcheck", family=family, num_layers=1, d_model=128,
+            num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+            dtype="float32", remat=False, **extra,
+        )
+        shape = ShapeConfig("t", seq_len=256, global_batch=2, kind="prefill")
+        model = build_model(cfg)
+        hlo = _hlo_flops(model, cfg, shape, "prefill")
+        stack, head = analytic.forward_flops(cfg, 2, 256)
+        ours = stack + head
+        ratio = ours / hlo
+        assert 0.75 < ratio < 1.35, f"analytic/HLO = {ratio:.3f} ({ours:.3e} vs {hlo:.3e})"
+
+    def test_decode_flops_dense(self):
+        cfg = ModelConfig(
+            name="fcheck", family="dense", num_layers=1, d_model=128,
+            num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+            dtype="float32", remat=False,
+        )
+        shape = ShapeConfig("d", seq_len=512, global_batch=4, kind="decode")
+        model = build_model(cfg)
+        hlo = _hlo_flops(model, cfg, shape, "decode")
+        ours = analytic.decode_flops(cfg, 4, 512)
+        ratio = ours / hlo
+        assert 0.6 < ratio < 1.6, f"analytic/HLO = {ratio:.3f}"
+
+
+class TestCollectiveParsing:
+    HLO = """
+ENTRY %main (p0: f32[16,16]) -> f32[16,16] {
+  %ar = f32[16,16]{1,0} all-reduce(%x), replica_groups=[4,2]<=[8], to_apply=%add
+  %ag = f32[16,64]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={1}
+  %rs = f32[16,4]{1,0} reduce-scatter(%z), replica_groups=[2,4]<=[8], dimensions={1}
+  %cp = f32[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+}
+"""
+
+    def test_kinds_and_semantics(self):
+        out = collective_bytes_from_hlo(self.HLO)
+        assert out["all-reduce"] == 16 * 16 * 4
+        assert out["all-gather"] == 16 * 64 * 4 // 4      # operand = out/group
+        assert out["reduce-scatter"] == 16 * 4 * 4 * 4    # operand = out*group
+        assert out["collective-permute"] == 8 * 8 * 4
+
+    def test_ignores_non_collectives(self):
+        out = collective_bytes_from_hlo("%dot = f32[8,8] dot(%a, %b)")
+        assert sum(out.values()) == 0
+
+
+class TestModelFlops:
+    def test_train_is_6nd(self):
+        from repro.config import get_arch
+        from repro.models.counting import active_param_count, embedding_param_count
+
+        cfg = get_arch("glm4-9b")
+        shape = ShapeConfig("t", 4096, 256, "train")
+        n = active_param_count(cfg) - embedding_param_count(cfg)
+        assert model_flops(cfg, shape) == pytest.approx(6 * n * 256 * 4096)
+
+    def test_moe_uses_active(self):
+        from repro.config import get_arch
+        q3 = get_arch("qwen3-moe-30b-a3b")
+        glm = get_arch("glm4-9b")
+        shape = ShapeConfig("t", 4096, 256, "train")
+        # 30B total but ~3B active: model flops land well below a dense 9B
+        assert model_flops(q3, shape) < model_flops(glm, shape)
+
+
+class TestRooflineTerms:
+    def test_bottleneck_selection(self):
+        cfg = ModelConfig(name="x", family="dense", num_layers=1, d_model=64,
+                          num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256)
+        shape = ShapeConfig("t", 64, 2, "train")
+        mesh = MeshConfig()
+        out = roofline_terms_from(1e18, 1e9, 1e3, cfg, shape, mesh)
+        assert out["bottleneck"] == "compute_s"
+        out = roofline_terms_from(1e9, 1e18, 1e3, cfg, shape, mesh)
+        assert out["bottleneck"] == "memory_s"
+        out = roofline_terms_from(1e9, 1e9, 1e12, cfg, shape, mesh)
+        assert out["bottleneck"] == "collective_s"

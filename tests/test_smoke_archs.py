@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED same-family config, run one forward and one train step on CPU,
+assert output shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, get_arch, get_smoke, list_archs, SHAPES, ShapeConfig
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+ARCHS = list_archs()
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=16, global_batch=2, kind="train")
+
+
+def make_batch(model, shape, key):
+    """Realize input_specs as random arrays."""
+    specs = model.input_specs(shape)
+    batch = {}
+    for k, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            batch[k] = jax.random.randint(sub, s.shape, 0, model.cfg.vocab_size, s.dtype)
+        else:
+            batch[k] = (jax.random.normal(sub, s.shape, jnp.float32) * 0.02).astype(s.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_arch(arch)
+    assigned = {
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    L, d, H, KV, F, V = assigned
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == KV
+    assert cfg.d_ff == F
+    assert cfg.vocab_size == V
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    batch = make_batch(model, SMOKE_SHAPE, key)
+
+    logits, aux = jax.jit(model.forward)(
+        {k: v for k, v in model.init(key).items()}, batch
+    )
+    text_len = batch["tokens"].shape[1]
+    assert logits.shape == (SMOKE_SHAPE.global_batch, text_len, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), "NaN in forward logits"
+
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4, optimizer="adamw")
+    state = init_train_state(model, tcfg, key)
+    step = jax.jit(make_train_step(model, tcfg))
+    if "labels" not in batch:
+        batch["labels"] = batch["tokens"]
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), metrics
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key)
+    B, cache_len = 2, 16
+    cache = model.init_cache(B, cache_len)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, tok)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_param_counts_are_plausible():
+    """Analytic N for the full configs lands near the advertised scale."""
+    expect_range = {
+        "qwen2-moe-a2.7b": (10e9, 20e9),      # 14.3B total / 2.7B active
+        "qwen3-moe-30b-a3b": (25e9, 35e9),
+        "starcoder2-7b": (6e9, 9e9),
+        "glm4-9b": (8e9, 12e9),
+        # assigned dims (88L x 6144 x 24576 ff) analytically give ~47B;
+        # the "34b" branding refers to the hf model's different ff ratio.
+        "granite-34b": (30e9, 50e9),
+        "h2o-danube-1.8b": (1.4e9, 2.4e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "internvl2-2b": (1.5e9, 2.8e9),
+        "whisper-tiny": (25e6, 90e6),
+        "zamba2-1.2b": (0.9e9, 1.9e9),
+    }
+    from repro.models.counting import active_param_count, param_count
+
+    for arch, (lo, hi) in expect_range.items():
+        n = param_count(get_arch(arch))
+        assert lo <= n <= hi, f"{arch}: N={n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+    # MoE active << total
+    q3 = get_arch("qwen3-moe-30b-a3b")
+    assert active_param_count(q3) < 0.2 * param_count(q3)

@@ -1,0 +1,166 @@
+"""End-to-end system tests: the paper's flagship use-cases running on the VM.
+
+Ex. 2 (§4.3.2): a [4,3,2] fixed-point ANN implemented entirely in one code
+frame using the vector ISA — validated against a numpy implementation of the
+same integer arithmetic.
+
+§7.4/§7.5: a measuring job (ADC via FIOS, hull + ANN readout) — the
+structural-health-monitoring flow.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import VMConfig
+from repro.core.fixedpoint import fpsigmoid
+from repro.core.vm import REXAVM
+
+CFG = VMConfig(cs_size=8192, steps_per_slice=1024)
+
+ANN_PROGRAM = """
+( paper Ex. 2: [4,3,2] network, parameters embedded in the code frame )
+array input { 120 -40 300 7 }
+array wghtI { 10 -15 10 2 }
+array biasI { -2 15 0 1 }
+array scaleI { 0 0 0 0 }
+array activI 4
+
+array wghtH1 {
+  10 -5 4
+  0 1 1
+  5 -2 -2
+  2 0 1
+}
+array biasH1 { -4 5 10 }
+array scaleH1 { -2 0 -8 }
+array activH1 3
+
+array wghtO {
+  2 5
+  6 1
+  9 0
+}
+array biasO { -1 1 }
+array scaleO { -2 0 }
+array output 2
+
+: forward
+  ( input layer: elementwise weights + bias + sigmoid )
+  input wghtI activI scaleI vecmul
+  activI biasI activI 0 vecadd
+  activI activI 0 0 vecmap
+  ( hidden layer: fold + bias + sigmoid )
+  activI wghtH1 activH1 scaleH1 vecfold
+  activH1 biasH1 activH1 0 vecadd
+  activH1 activH1 0 0 vecmap
+  ( output layer )
+  activH1 wghtO output scaleO vecfold
+  output biasO output 0 vecadd
+  output output 0 0 vecmap
+;
+forward
+output vecprint cr
+output vecmax .
+"""
+
+
+def numpy_ann_reference():
+    """Identical integer arithmetic in numpy (the oracle for Ex. 2)."""
+    def scale1(v, s):
+        if s > 0:
+            return v * s
+        if s < 0:
+            q = abs(v) // (-s)
+            return -q if v < 0 else q
+        return v
+
+    inp = np.array([120, -40, 300, 7])
+    wI = np.array([10, -15, 10, 2])
+    bI = np.array([-2, 15, 0, 1])
+    act = inp * wI + bI
+    act = np.array([fpsigmoid(int(v)) for v in act])
+
+    wH = np.array([[10, -5, 4], [0, 1, 1], [5, -2, -2], [2, 0, 1]])
+    sH = [-2, 0, -8]
+    h = act @ wH
+    h = np.array([scale1(int(v), s) for v, s in zip(h, sH)])
+    h = h + np.array([-4, 5, 10])
+    h = np.array([fpsigmoid(int(v)) for v in h])
+
+    wO = np.array([[2, 5], [6, 1], [9, 0]])
+    sO = [-2, 0]
+    o = h @ wO
+    o = np.array([scale1(int(v), s) for v, s in zip(o, sO)])
+    o = o + np.array([-1, 1])
+    o = np.array([fpsigmoid(int(v)) for v in o])
+    return o
+
+
+@pytest.mark.parametrize("backend", ["oracle", "jit"])
+def test_paper_ex2_ann(backend):
+    vm = REXAVM(CFG, backend=backend)
+    res = vm.eval(ANN_PROGRAM)
+    assert res.status == "done", res.status
+    ref = numpy_ann_reference()
+    lines = res.output.strip().split("\n")
+    got = [int(v) for v in lines[0].split()]
+    assert got == ref.tolist()
+    assert int(lines[1]) == int(np.argmax(ref))
+
+
+def test_measuring_job_shm_flow():
+    """§7.4/7.5: active measuring job — dac stimulus, adc sampling with
+    await, hull envelope, ANN-style readout, result sent upstream."""
+    vm = REXAVM(CFG, backend="oracle")
+
+    # Host side: simulated GUW echo in the sample buffer (DIOS), ADC + DAC
+    # devices (FIOS), completion flag (paper Ex. 1 `sampled`).
+    n = 32
+    t = np.arange(n)
+    echo = (np.sin(t / 2.5) * np.exp(-((t - 12) ** 2) / 40.0) * 1000).astype(np.int32)
+    vm.dios_add("samples", np.zeros(n, np.int32))
+    vm.dios_add("sampled", np.array([0], np.int32))
+    events = []
+
+    def dac(wave, interval, ampl, freq):
+        events.append(("dac", wave, interval, ampl, freq))
+
+    def adc(trig, depth, gain, freq):
+        events.append(("adc", trig, depth, gain, freq))
+        vm.dios_write("samples", echo)
+        vm.dios_write("sampled", [1])
+
+    vm.fios_add("dac", dac, args=4, ret=0)
+    vm.fios_add("adc", adc, args=4, ret=0)
+
+    job = """
+    ( measuring job pushed as an active message )
+    0 1 800 100 dac
+    10 1 1 100 adc
+    1000 1 sampled await
+    0< if ." timeout" cr end endif
+    samples 0 32 400 hull
+    samples vecmax
+    dup out
+    samples get out
+    """
+    res = vm.eval(job, max_slices=4000)
+    assert res.status == "done"
+    assert events[0][0] == "dac" and events[1][0] == "adc"
+    peak_idx, peak_val = vm.out_stream
+    # Hull envelope peaks near the echo center and is non-negative.
+    assert 5 <= peak_idx <= 20
+    assert peak_val > 0
+
+
+def test_incremental_code_update_flow():
+    """Paper adaptivity: a node receives a v2 word that replaces v1 without
+    reflashing — pure-text active messages."""
+    vm = REXAVM(CFG, backend="oracle")
+    for f in [vm.load(": classify 100 * ; export classify")]:
+        vm.run(f)
+    r1 = vm.eval("3 classify out")
+    f2 = vm.load(": classify 200 * ; export classify")
+    vm.run(f2)
+    r2 = vm.eval("3 classify out")
+    assert vm.out_stream == [300, 600]

@@ -1,0 +1,197 @@
+"""Compiler tests: tokenizer, PHT/LST lookup structures, in-place invariant,
+code frames and dictionary (paper §3.1, §3.9, §3.11)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import VMConfig
+from repro.core.vm import (
+    CompileError,
+    Compiler,
+    FrameManager,
+    LinearSearchTable,
+    PerfectHashTable,
+    get_isa,
+    tokenize,
+)
+from repro.core.vm.compiler import parse_number
+
+
+class TestTokenizer:
+    def test_basic(self):
+        toks = tokenize("1 2 + . cr")
+        assert [t.text for t in toks] == ["1", "2", "+", ".", "cr"]
+
+    def test_comment(self):
+        toks = tokenize("1 ( this is a comment ) 2")
+        assert [t.text for t in toks] == ["1", "2"]
+
+    def test_string(self):
+        toks = tokenize('." hello world" cr')
+        assert toks[0].text == "hello world"
+        assert toks[1].text == "cr"
+
+    def test_array_literal(self):
+        toks = tokenize("array a { 1 -2 3 }")
+        assert toks[2].value == [1, -2, 3]
+
+    def test_numbers(self):
+        assert parse_number("42") == 42
+        assert parse_number("-7") == -7
+        assert parse_number("123456789l") == 123456789
+        assert parse_number("0x10") == 16
+        assert parse_number("abc") is None
+        assert parse_number("1a") is None
+
+    def test_unterminated(self):
+        with pytest.raises(CompileError):
+            tokenize("( never closed")
+        with pytest.raises(CompileError):
+            tokenize('." never closed')
+
+
+class TestLookupTables:
+    """PHT vs LST equivalence — paper §3.9.1/§3.9.2."""
+
+    def setup_method(self):
+        self.names = [w.name for w in get_isa().words]
+        self.pht = PerfectHashTable(self.names)
+        self.lst = LinearSearchTable(self.names)
+
+    def test_pht_all_words(self):
+        for i, w in enumerate(self.names):
+            assert self.pht.lookup(w) == i, w
+
+    def test_lst_all_words(self):
+        for i, w in enumerate(self.names):
+            assert self.lst.lookup(w) == i, w
+
+    def test_rejects_nonwords(self):
+        for bad in ["foo", "xyzzy", "++", "1", "", "dupp", "du"]:
+            assert self.pht.lookup(bad) == -1
+            assert self.lst.lookup(bad) == -1
+
+    @given(st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126), max_size=10))
+    @settings(max_examples=300, deadline=None)
+    def test_pht_lst_equivalent(self, word):
+        assert self.pht.lookup(word) == self.lst.lookup(word)
+
+    def test_sizes_reported(self):
+        # Paper: LST ~700 B for ~100 words; PHT = disp + string table.
+        assert self.lst.size_bytes() > 0
+        assert self.pht.size_bytes() > 0
+
+
+class TestFrames:
+    def test_allocate_remove(self):
+        fm = FrameManager(1024)
+        f1 = fm.allocate(100)
+        f2 = fm.allocate(100)
+        assert f2.start == 100
+        fm.remove(f1)  # middle removal leaves hole at [0,100)
+        fm.remove(f2)  # top removal rolls back and coalesces the hole
+        assert fm.free_ptr == 0
+
+    def test_hole_reuse(self):
+        fm = FrameManager(1024)
+        f1 = fm.allocate(100)
+        f2 = fm.allocate(100)
+        fm.remove(f1)           # hole at [0,100)
+        f3 = fm.allocate(50)    # reuses hole
+        assert f3.start == 0
+        f4 = fm.allocate(60)    # doesn't fit remaining hole -> appended
+        assert f4.start == 200
+
+    def test_locked_frame_not_removed(self):
+        fm = FrameManager(1024)
+        f = fm.allocate(10)
+        f.locked = True
+        assert not fm.remove(f)
+
+    def test_exhaustion(self):
+        fm = FrameManager(64)
+        fm.allocate(60)
+        with pytest.raises(MemoryError):
+            fm.allocate(10)
+
+
+class TestCompile:
+    def setup_method(self):
+        self.cfg = VMConfig(cs_size=4096)
+        self.compiler = Compiler()
+        self.frames = FrameManager(self.cfg.cs_size)
+        self.frames.allocate(1)
+        self.cs = np.zeros(self.cfg.cs_size, np.int32)
+
+    def compile(self, text):
+        return self.compiler.compile_frame(text, self.cs, self.frames)
+
+    def test_literal_encoding(self):
+        isa = get_isa()
+        f = self.compile("5 -3 +")
+        assert self.cs[f.start] == isa.enc_lit(5)
+        assert self.cs[f.start + 1] == isa.enc_lit(-3)
+        assert self.cs[f.start + 2] == isa.enc_op("+")
+        assert self.cs[f.start + 3] == isa.enc_op("end")
+
+    def test_big_literal_uses_dlit(self):
+        isa = get_isa()
+        f = self.compile("1000000000l drop")
+        assert self.cs[f.start] == isa.enc_op("dlit")
+        assert self.cs[f.start + 1] == 1000000000
+
+    def test_unknown_word(self):
+        with pytest.raises(CompileError, match="unknown word"):
+            self.compile("frobnicate")
+
+    def test_unterminated_if(self):
+        with pytest.raises(CompileError):
+            self.compile("1 if 2")
+
+    def test_definition_and_dictionary(self):
+        self.compile(": sq dup * ; export sq")
+        entry = self.compiler.dictionary.lookup("sq")
+        assert entry is not None and entry.exported
+
+    def test_import_missing(self):
+        with pytest.raises(CompileError, match="import failed"):
+            self.compile("import nothere")
+
+    def test_import_after_export(self):
+        f1 = self.compile(": sq dup * ; export sq")
+        assert f1.locked
+        self.compile("import sq 3 sq drop")  # compiles fine
+
+    def test_in_place_invariant_holds(self):
+        # Dense literal program: 1 cell per 2 chars is the tightest case.
+        prog = " ".join(["7"] * 100) + " " + "+ " * 99 + "drop"
+        self.compile(prog)  # raises CompileError if invariant violated
+
+    def test_uninit_array_appended(self):
+        f = self.compile("array buf 100 5 0 buf put")
+        # frame must have grown to hold 100 cells + header beyond the text
+        assert f.end - f.start >= 100
+
+    def test_const_emits_nothing(self):
+        isa = get_isa()
+        f = self.compile("const X 42 X drop")
+        assert self.cs[f.start] == isa.enc_lit(42)
+
+    def test_mcps_counter(self):
+        before = self.compiler.words_compiled
+        self.compile("1 2 + drop")
+        assert self.compiler.words_compiled - before == 4
+
+    def test_lst_mode_compiles_identically(self):
+        c2 = Compiler(lookup="lst")
+        fm2 = FrameManager(4096)
+        fm2.allocate(1)
+        cs2 = np.zeros(4096, np.int32)
+        prog = ": f 1 2 + ; f . cr"
+        f1 = self.compile(prog)
+        f2 = c2.compile_frame(prog, cs2, fm2)
+        n = f1.end - f1.start
+        assert np.array_equal(
+            self.cs[f1.start : f1.start + n], cs2[f2.start : f2.start + n]
+        )

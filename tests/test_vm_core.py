@@ -1,0 +1,379 @@
+"""VM behaviour tests on the Python oracle backend (fast; the jit backend is
+checked for byte-exact equivalence in test_vm_equivalence.py)."""
+
+import numpy as np
+import pytest
+
+from repro.config import VMConfig
+from repro.core.vm import REXAVM
+
+CFG = VMConfig(cs_size=4096, steps_per_slice=512)
+
+
+def run(text, **kw):
+    vm = REXAVM(CFG, backend="oracle")
+    res = vm.eval(text, **kw)
+    return res, vm
+
+
+class TestArithmetic:
+    @pytest.mark.parametrize(
+        "prog,expect",
+        [
+            ("1 2 + .", "3 "),
+            ("10 3 - .", "7 "),
+            ("6 7 * .", "42 "),
+            ("7 2 / .", "3 "),
+            ("-7 2 / .", "-3 "),        # C truncation, not floor
+            ("7 -2 / .", "-3 "),
+            ("-7 2 mod .", "-1 "),      # C remainder
+            ("5 negate .", "-5 "),
+            ("-5 abs .", "5 "),
+            ("3 9 min . 3 9 max .", "3 9 "),
+            ("41 1+ . 43 1- .", "42 42 "),
+            ("21 2* . 84 2/ .", "42 42 "),
+            ("100000 100000 1000 */ .", "10000000 "),  # 64-bit intermediate
+        ],
+    )
+    def test_arith(self, prog, expect):
+        res, _ = run(prog)
+        assert res.output == expect
+        assert res.status == "done"
+
+    @pytest.mark.parametrize(
+        "prog,expect",
+        [
+            ("1 2 < . 2 1 < .", "-1 0 "),
+            ("3 3 = . 3 4 <> .", "-1 -1 "),
+            ("0 0= . 1 0= .", "-1 0 "),
+            ("-1 0< . 1 0> .", "-1 -1 "),
+            ("3 5 and . 3 5 or . 3 5 xor .", "1 7 6 "),
+            ("1 3 lshift . 16 2 rshift .", "8 4 "),
+            ("0 invert .", "-1 "),
+        ],
+    )
+    def test_logic(self, prog, expect):
+        res, _ = run(prog)
+        assert res.output == expect
+
+
+class TestStack:
+    @pytest.mark.parametrize(
+        "prog,expect",
+        [
+            ("1 dup . .", "1 1 "),
+            ("1 2 swap . .", "1 2 "),
+            ("1 2 over . . .", "1 2 1 "),
+            ("1 2 3 rot . . .", "1 3 2 "),
+            ("1 2 nip . depth .", "2 0 "),
+            ("1 2 tuck . . .", "2 1 2 "),
+            ("10 20 30 2 pick . . . .", "10 30 20 10 "),
+            ("1 2 2dup . . . .", "2 1 2 1 "),
+        ],
+    )
+    def test_ops(self, prog, expect):
+        res, _ = run(prog)
+        assert res.output == expect
+
+    def test_underflow_no_handler_errors(self):
+        res, vm = run("drop")
+        assert res.status == "error"
+
+    def test_underflow_with_handler_recovers(self):
+        prog = """
+        : h ." x" ;
+        $ h exception stack
+        catch if ." recovered" else drop ." never" endif
+        """
+        res, _ = run(prog)
+        assert "recovered" in res.output
+        assert res.status == "done"
+
+
+class TestControlFlow:
+    def test_if_else(self):
+        res, _ = run("1 if 10 . else 20 . endif 0 if 10 . else 20 . endif")
+        assert res.output == "10 20 "
+
+    def test_then_alias(self):
+        res, _ = run("1 if 5 . then")
+        assert res.output == "5 "
+
+    def test_do_loop(self):
+        res, _ = run("4 0 do i . loop")
+        assert res.output == "0 1 2 3 "
+
+    def test_nested_do_loop_j(self):
+        res, _ = run("2 0 do 2 0 do j i + . loop loop")
+        assert res.output == "0 1 1 2 "
+
+    def test_begin_until(self):
+        res, _ = run("0 begin 1+ dup . dup 3 >= until drop")
+        assert res.output == "1 2 3 "
+
+    def test_begin_while_repeat(self):
+        res, _ = run("0 begin dup 3 < while dup . 1+ repeat drop")
+        assert res.output == "0 1 2 "
+
+    def test_words_and_calls(self):
+        res, _ = run(": sq dup * ; : quad sq sq ; 3 quad .")
+        assert res.output == "81 "
+
+    def test_exec(self):
+        res, _ = run(": f 42 . ; $ f exec")
+        assert res.output == "42 "
+
+    def test_exit_early_return(self):
+        res, _ = run(": f 1 . exit 2 . ; f")
+        assert res.output == "1 "
+
+
+class TestMemory:
+    def test_var(self):
+        res, _ = run("var x 42 x ! x @ . 1 x +! x @ .")
+        assert res.output == "42 43 "
+
+    def test_array_init_and_index(self):
+        res, _ = run("array a { 5 6 7 } 1 a get . 99 2 a put 2 a get . a len .")
+        assert res.output == "6 99 3 "
+
+    def test_array_bounds_error(self):
+        res, _ = run("array a { 1 2 } 5 a get .")
+        assert res.status == "error"
+
+    def test_softcore_stack(self):
+        res, _ = run("array s 10 7 s push 8 s push s pop . s pop .")
+        assert res.output == "8 7 "
+
+    def test_fill(self):
+        res, _ = run("array a 4 9 a fill a vecprint")
+        assert res.output == "9 9 9 9 "
+
+
+class TestVectorOps:
+    def test_vecadd_vecmul(self):
+        res, _ = run(
+            "array a { 1 2 3 } array b { 10 20 30 } array c 3 "
+            "a b c 0 vecadd c vecprint cr a b c 0 vecmul c vecprint"
+        )
+        assert res.output == "11 22 33 \n10 40 90 "
+
+    def test_vecadd_with_scale(self):
+        # scale -2 halves, +3 triples (paper Tab. 5 semantics)
+        res, _ = run(
+            "array a { 4 4 } array b { 4 2 } array s { -2 3 } array c 2 "
+            "a b c s vecadd c vecprint"
+        )
+        assert res.output == "4 18 "
+
+    def test_vecfold(self):
+        # 2x3 weight: out_j = sum_i in_i * w[i*3+j]
+        res, _ = run(
+            "array x { 1 2 } array w { 1 2 3 4 5 6 } array y 3 "
+            "x w y 0 vecfold y vecprint"
+        )
+        assert res.output == "9 12 15 "
+
+    def test_dotprod(self):
+        res, _ = run("array a { 1 2 3 } array b { 4 5 6 } a b dotprod .")
+        assert res.output == "32 "
+
+    def test_vecmap_relu(self):
+        res, _ = run("array a { -5 3 -1 2 } array b 4 a b 1 0 vecmap b vecprint")
+        assert res.output == "0 3 0 2 "
+
+    def test_vecmax(self):
+        res, _ = run("array a { 3 9 2 9 } a vecmax .")
+        assert res.output == "1 "
+
+    def test_vecload_offset(self):
+        res, _ = run("array src { 9 8 7 6 5 } array dst 2 src 2 dst vecload dst vecprint")
+        assert res.output == "7 6 "
+
+    def test_lowp_filter_converges(self):
+        res, vm = run("array a { 1000 1000 1000 1000 1000 1000 1000 1000 } a 0 8 500 lowp a vecprint")
+        vals = [int(v) for v in res.output.split()]
+        assert vals[0] == 1000 and all(v == 1000 for v in vals)
+
+    def test_highp_removes_dc(self):
+        res, _ = run("array a { 100 100 100 100 } a 0 4 1000 highp a vecprint")
+        assert res.output == "0 0 0 0 "
+
+
+class TestFixedPointWords:
+    def test_sigmoid_points(self):
+        res, _ = run("0 sigmoid . 10000 sigmoid . -10000 sigmoid .")
+        assert res.output == "500 1000 0 "
+
+    def test_relu_sqrt(self):
+        res, _ = run("-5 relu . 5 relu . 144 sqrt . 2 sqrt .")
+        assert res.output == "0 5 12 1 "
+
+    def test_log(self):
+        # log word: x scale 1:10, y scale 1:1000; log(10.0) = 1.0 -> 1000
+        res, _ = run("100 log .")
+        assert res.output == "1000 "
+
+    def test_sin_quarters(self):
+        res, _ = run("0 sin . 1571 sin . 3141 sin . 4712 sin .")
+        vals = [int(v) for v in res.output.split()]
+        assert vals[0] == 0
+        assert abs(vals[1] - 1000) <= 5
+        assert abs(vals[2]) <= 10
+        assert abs(vals[3] + 1000) <= 5
+
+
+class TestExceptions:
+    def test_divbyzero_recovery(self):
+        prog = """
+        : h ." !" ;
+        $ h exception divbyzero
+        catch if ." caught" cr else 10 0 / . ." nocatch" cr endif
+        """
+        res, _ = run(prog)
+        assert "caught" in res.output
+        assert res.status == "done"
+
+    def test_throw_user(self):
+        prog = """
+        : h ;
+        $ h exception user
+        catch if ." got" else 8 throw endif
+        """
+        res, _ = run(prog)
+        assert "got" in res.output
+
+    def test_unhandled_is_fatal(self):
+        res, _ = run("10 0 / .")
+        assert res.status == "error"
+
+
+class TestTasksAndTime:
+    def test_spawn_and_event(self):
+        prog = """
+        var flag
+        : worker 3 0 do yield loop 1 flag ! end ;
+        0 0 $ worker task drop
+        1000 1 flag await
+        0= if ." event" else ." timeout" endif cr
+        """
+        res, _ = run(prog)
+        assert "event" in res.output
+
+    def test_await_timeout(self):
+        prog = """
+        var flag
+        50 1 flag await
+        0< if ." timeout" else ." event" endif
+        """
+        res, _ = run(prog)
+        assert "timeout" in res.output
+
+    def test_sleep_advances_virtual_time(self):
+        res, _ = run("ms 500 sleep ms swap - .")
+        assert int(res.output.split()[0]) >= 500
+
+    def test_taskid(self):
+        res, _ = run("taskid .")
+        assert res.output == "0 "
+
+    def test_two_tasks_interleave(self):
+        prog = """
+        var a var b
+        : w1 1 a ! yield 2 a ! end ;
+        : w2 1 b ! yield 2 b ! end ;
+        0 0 $ w1 task drop
+        0 0 $ w2 task drop
+        2000 2 a await drop
+        2000 2 b await drop
+        a @ . b @ .
+        """
+        res, _ = run(prog)
+        assert res.output == "2 2 "
+
+    def test_steps_profiling_word(self):
+        res, _ = run("steps steps swap - .")
+        # two `steps` executions apart: positive small count
+        assert int(res.output.split()[0]) >= 1
+
+
+class TestIOS:
+    def test_fios_roundtrip(self):
+        vm = REXAVM(CFG, backend="oracle")
+        calls = []
+        vm.fios_add("twice", lambda v: calls.append(v) or v * 2, args=1, ret=1)
+        res = vm.eval("21 twice .")
+        assert res.output == "42 "
+        assert calls == [21]
+
+    def test_dios_data_access(self):
+        vm = REXAVM(CFG, backend="oracle")
+        vm.dios_add("buf", np.array([5, 10, 15], np.int32))
+        res = vm.eval("1 buf get . buf len .")
+        assert res.output == "10 3 "
+
+    def test_out_stream(self):
+        vm = REXAVM(CFG, backend="oracle")
+        res = vm.eval("1 out 2 out 3 out")
+        assert vm.out_stream == [1, 2, 3]
+
+    def test_in_stream(self):
+        vm = REXAVM(CFG, backend="oracle")
+        vm.in_queue = [7, 9]
+        res = vm.eval("in in + .")
+        assert res.output == "16 "
+
+    def test_send_receive(self):
+        vm = REXAVM(CFG, backend="oracle")
+        vm.recv_queue = [(3, 99)]
+        res = vm.eval("42 5 send receive . .")
+        assert vm.sent == [(5, 42)]
+        assert res.output == "99 3 "
+
+    def test_in_empty_queue_deadlocks(self):
+        vm = REXAVM(CFG, backend="oracle")
+        res = vm.eval("in .", max_slices=20)
+        assert res.status in ("deadlock", "budget")
+
+
+class TestIncremental:
+    def test_export_and_reuse_across_frames(self):
+        vm = REXAVM(CFG, backend="oracle")
+        f1 = vm.load(": triple 3 * ; export triple")
+        vm.run(f1)
+        res = vm.eval("import triple 14 triple .")
+        assert res.output == "42 "
+
+    def test_redefinition_overwrites(self):
+        vm = REXAVM(CFG, backend="oracle")
+        f1 = vm.load(": f 1 ; export f")
+        vm.run(f1)
+        f2 = vm.load(": f 2 ; export f")
+        vm.run(f2)
+        res = vm.eval("f .")
+        assert res.output == "2 "
+
+    def test_frame_removal_frees_cs(self):
+        vm = REXAVM(CFG, backend="oracle")
+        used0 = vm.frames.free_ptr
+        res = vm.eval("1 2 + .")
+        assert vm.frames.free_ptr == used0
+
+
+class TestCheckpoint:
+    def test_stop_and_go(self):
+        """Paper resilience 5: interrupt, checkpoint, restore, resume."""
+        prog = "0 100 0 do 1+ loop ."
+        vm = REXAVM(CFG, backend="oracle")
+        frame = vm.load(prog)
+        vm.launch(frame)
+        # run a few small slices, then "power loss"
+        for _ in range(3):
+            vm._slice(37)
+        ckpt = vm.checkpoint()
+        # fresh VM ("reboot"), restore, finish
+        vm2 = REXAVM(CFG, backend="oracle")
+        vm2.restore(ckpt)
+        res = vm2.run(max_slices=1000)
+        assert res.output == "100 "
+        assert res.status == "done"
