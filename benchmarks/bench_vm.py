@@ -1,6 +1,8 @@
 """Paper Tab. 9 — VM interpreter throughput (MWPS) and compiler throughput
-(MCPS), for the oracle ("software") and jitted ("hardware") backends plus
-the vmapped Parallel-VM ensemble (paper §3.4)."""
+(MCPS), for the oracle ("software") and jitted ("hardware") backends, the
+vmapped Parallel-VM ensemble (paper §3.4), and the device-resident fleet
+runtime (steps/s and host<->device transfer counts vs. the seed's
+per-slice host loop)."""
 
 from __future__ import annotations
 
@@ -10,21 +12,32 @@ import jax
 import numpy as np
 
 from repro.config import VMConfig
-from repro.core.vm import Compiler, EnsembleVM, FrameManager, REXAVM, replicate_state
+from repro.core.vm import (
+    Compiler,
+    EnsembleVM,
+    FleetVM,
+    FrameManager,
+    REXAVM,
+    reference_round,
+    replicate_state,
+)
 from repro.core.vm import vmstate as vms
+from repro.core.vm.spec import ST_DONE, ST_ERR, ST_HALT
 
 BENCH_PROG = ": work 0 begin 1+ dup 1000 >= until drop ; work work work work"
 
 
-def mwps(backend: str, steps_budget: int = 200_000) -> float:
+def mwps(backend: str, steps_budget: int = 200_000) -> tuple[float, int]:
+    """Returns (MWPS, full-state host<->device transfers)."""
     cfg = VMConfig(cs_size=2048, steps_per_slice=8192)
     vm = REXAVM(cfg, backend=backend)
     # Warm up compile path.
     vm.eval("1 drop", max_slices=4)
+    t0_xfer = vm.executor.h2d + vm.executor.d2h
     t0 = time.perf_counter()
     res = vm.eval(BENCH_PROG, max_slices=steps_budget // 8192 + 50, steps=8192)
     dt = time.perf_counter() - t0
-    return res.steps / dt / 1e6
+    return res.steps / dt / 1e6, vm.executor.h2d + vm.executor.d2h - t0_xfer
 
 
 def mwps_ensemble(n: int = 32) -> tuple[float, float]:
@@ -48,6 +61,68 @@ def mwps_ensemble(n: int = 32) -> tuple[float, float]:
     return total / dt / 1e6, per_slice * iters / dt / 1e6
 
 
+def bench_fleet(n: int = 64) -> tuple[float, float, int, int]:
+    """Sensor-network message round: a token circles an n-node ring, each
+    hop incrementing it — the paper's message-bound distributed regime
+    (nodes mostly suspended on ``receive``, micro-slicing).  The same
+    programs run
+
+      * device-resident (FleetVM: vmapped slices + on-device mailbox routing,
+        state syncs host<->device exactly twice), and
+      * through the seed per-slice loop (`reference_round`: one REXAVM per
+        node, full state copied host<->device every micro-slice, messages
+        routed in Python).
+
+    Returns (fleet steps/s, host-loop steps/s, fleet transfers, host-loop
+    transfers).  Note: on CPU the vmapped decoder serialises compute-bound
+    lanes, so the fleet's edge is the eliminated per-slice transfer + host
+    service overhead; on accelerators the lanes parallelise as well."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+
+    def prog(i: int) -> str:
+        if i == 0:
+            return f"1 {1 % n} send receive swap drop . halt"
+        return f"receive swap drop 1+ {(i + 1) % n} send halt"
+
+    def build(kind):
+        if kind == "fleet":
+            fleet = FleetVM(cfg, n=n)
+            for i, node in enumerate(fleet.nodes):
+                node.launch(node.load(prog(i)))
+            return fleet
+        nodes = [REXAVM(cfg, backend="jit", seed=1 + i) for i in range(n)]
+        for i, node in enumerate(nodes):
+            node.launch(node.load(prog(i)))
+        return nodes
+
+    # Warm both compiled paths (fleet round kernel + single-VM run_slice).
+    warm = build("fleet")
+    warm.run(max_rounds=2, steps=cfg.steps_per_slice)
+    warm_vm = REXAVM(cfg, backend="jit")
+    warm_vm.eval("1 drop", max_slices=2, steps=cfg.steps_per_slice)
+
+    fleet = build("fleet")
+    t0 = time.perf_counter()
+    res = fleet.run(max_rounds=4 * n)
+    dt_fleet = time.perf_counter() - t0
+    fleet_steps = int(res.steps.sum())
+    fleet_xfer = fleet.h2d + fleet.d2h
+
+    nodes = build("host")
+    steps0 = sum(int(vm.state.steps) for vm in nodes)
+    t0 = time.perf_counter()
+    for _ in range(res.rounds):
+        reference_round(nodes, cfg.steps_per_slice)
+        if all(int(vm.state.tstatus[0]) in (ST_DONE, ST_HALT, ST_ERR)
+               for vm in nodes):
+            break
+    dt_host = time.perf_counter() - t0
+    host_steps = sum(int(vm.state.steps) for vm in nodes) - steps0
+    host_xfer = sum(vm.executor.h2d + vm.executor.d2h for vm in nodes)
+    return (fleet_steps / dt_fleet, host_steps / dt_host,
+            fleet_xfer, host_xfer)
+
+
 def mcps(lookup: str = "pht") -> float:
     comp = Compiler(lookup=lookup)
     frames = FrameManager(1 << 20)
@@ -67,14 +142,21 @@ def mcps(lookup: str = "pht") -> float:
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
-    m_o = mwps("oracle")
+    m_o, _ = mwps("oracle")
     rows.append(("vm_mwps_oracle", 1.0 / m_o, f"{m_o:.3f} MWPS (python oracle)"))
-    m_j = mwps("jit")
-    rows.append(("vm_mwps_jit", 1.0 / m_j, f"{m_j:.3f} MWPS (XLA single VM)"))
+    m_j, xfer_j = mwps("jit")
+    rows.append(("vm_mwps_jit", 1.0 / m_j,
+                 f"{m_j:.3f} MWPS (XLA single VM; {xfer_j} host<->device "
+                 f"transfers in the per-slice loop)"))
     agg, single = mwps_ensemble(32)
     rows.append(("vm_mwps_ensemble32", 1.0 / agg,
                  f"{agg:.3f} MWPS aggregate over 32 lock-stepped VMs "
                  f"({single:.3f} per instance)"))
+    f_sps, h_sps, f_xfer, h_xfer = bench_fleet(64)
+    rows.append(("vm_fleet64_network", 1e6 / f_sps,
+                 f"{f_sps:.0f} steps/s device-resident 64-node network "
+                 f"({f_xfer} full-state transfers) vs {h_sps:.0f} steps/s "
+                 f"({h_xfer} transfers) seed per-slice host loop"))
     c_pht = mcps("pht")
     rows.append(("compiler_mcps_pht", 1.0 / c_pht, f"{c_pht:.3f} MCPS (perfect hash)"))
     c_lst = mcps("lst")

@@ -1,10 +1,16 @@
-"""Sensor-node measuring job (paper §7.1/§7.4): a virtual GUW node driven
-entirely by textual active messages.
+"""Sensor-network measuring jobs on the fleet runtime (paper §7.1/§7.4, §3.4).
 
-The host application registers ADC/DAC devices and the sample buffer via
-the IOS (paper Def. 2); the *entire* measuring logic — stimulus, wait on
-conversion, hull envelope, peak detection, result upload — arrives as a
-text code frame over the (simulated) NFC link.
+A virtual GUW monitoring network: every sensor node is one REXAVM whose
+*entire* measuring logic — stimulus, wait on conversion, hull envelope, peak
+detection — arrives as a text code frame over the (simulated) NFC link.  The
+nodes run as one device-resident :class:`FleetVM`: a single batched
+interpreter executes all of them, and each node reports its peak to a
+collector node through the on-device ``send``/``receive`` mailbox rings —
+no host round trip per message.
+
+The host application still registers ADC/DAC devices and the sample buffer
+via the IOS (paper Def. 2); those FIOS calls are serviced when the fleet
+syncs on IO suspension.
 
     PYTHONPATH=src python examples/sensor_node.py
 """
@@ -12,9 +18,13 @@ text code frame over the (simulated) NFC link.
 import numpy as np
 
 from repro.config import VMConfig
-from repro.core.vm import REXAVM
+from repro.core.vm import FleetVM, REXAVM
 
-JOB = """
+CFG = VMConfig(cs_size=8192, steps_per_slice=2048)
+
+# The measuring job (per sensor node): ping, sample, envelope, peak — then
+# report (peak_idx, peak_amp) and send the peak index to the collector node.
+MEASURE_JOB = """
 ( measuring job: active GUW ping + envelope + peak report )
 0 1 800 100 dac          ( hamming sine burst on the actuator )
 10 1 1 100 adc           ( start sampling: free trigger, 1kS, gain 1 )
@@ -22,15 +32,20 @@ JOB = """
 0< if ." timeout!" cr end endif
 samples 0 64 400 hull    ( rectify + low-pass envelope, k=0.4 )
 samples vecmax           ( peak index = time of flight )
-dup out                  ( report peak position )
-samples get out          ( report peak amplitude )
+dup out                  ( report peak position to the host stream )
+dup samples get out      ( report peak amplitude )
+{collector} send         ( and route the peak to the collector node )
+"""
+
+# The collector node: gather one peak per sensor over the mailbox ring.
+COLLECT_JOB = """
+( collector: receive n peaks, print "src peak" pairs )
+{n} 0 do receive swap . . cr loop halt
 """
 
 
-def make_node(defect_pos: float) -> REXAVM:
-    """A node whose echo time-of-flight depends on the defect distance."""
-    cfg = VMConfig(cs_size=8192, steps_per_slice=2048)
-    vm = REXAVM(cfg, backend="jit")
+def wire_sensor(vm: REXAVM, defect_pos: float) -> None:
+    """Attach the virtual ADC/DAC whose echo depends on the defect distance."""
     n = 64
     vm.dios_add("samples", np.zeros(n, np.int32))
     vm.dios_add("sampled", np.array([0], np.int32))
@@ -48,19 +63,36 @@ def make_node(defect_pos: float) -> REXAVM:
 
     vm.fios_add("dac", dac, args=4, ret=0)
     vm.fios_add("adc", adc, args=4, ret=0)
-    return vm
 
 
 def main():
+    defects = [0.1, 0.35, 0.6, 0.85]
+    n_sensors = len(defects)
+    collector = n_sensors                      # last fleet index
+
+    fleet = FleetVM(CFG, n=n_sensors + 1)
+    for i, defect in enumerate(defects):
+        node = fleet.nodes[i]
+        wire_sensor(node, defect)
+        node.launch(node.load(MEASURE_JOB.format(collector=collector)))
+    fleet.nodes[collector].launch(
+        fleet.nodes[collector].load(COLLECT_JOB.format(n=n_sensors))
+    )
+
+    res = fleet.run(max_rounds=500)
+    assert all(s in ("done", "halt") for s in res.statuses), res.statuses
+
     print("node  defect_pos  peak_idx  peak_amp  est_distance")
-    for defect in [0.1, 0.35, 0.6, 0.85]:
-        vm = make_node(defect)
-        res = vm.eval(JOB, max_slices=500)
-        assert res.status == "done", res.status
-        peak_idx, peak_amp = vm.out_stream
+    for i, defect in enumerate(defects):
+        peak_idx, peak_amp = fleet.nodes[i].out_stream
         est = (peak_idx - 10) / 40
         print(f"n{int(defect*100):03d}  {defect:10.2f}  {peak_idx:8d}  "
               f"{peak_amp:8d}  {est:12.2f}")
+    print(f"\ncollector (node {collector}) received via on-device routing:")
+    print(res.outputs[collector])
+    print(f"[fleet] {res.rounds} rounds, "
+          f"{fleet.h2d} h2d / {fleet.d2h} d2h full-state syncs "
+          f"(vs {2 * res.rounds * (n_sensors + 1)} for per-slice host loops)")
 
 
 if __name__ == "__main__":

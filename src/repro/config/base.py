@@ -266,6 +266,7 @@ class VMConfig:
     out_ring_size: int = 256          # output ring entries ([kind,value] pairs)
     max_vec: int = 64                 # vector-op window (paper ANNs <= 64/layer)
     us_per_instr: int = 10            # calibrated instr time for virtual clock
+    mbox_size: int = 32               # per-node mailbox ring entries (fleet send/receive)
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,14 @@
 """Parallel VM + ensemble execution (paper §3.4 and resilience feature 4).
 
-``vmap`` over the jitted interpreter gives N VM instances sharing one
-decoder — the paper's Parallel VM — and running the *same* code frame on all
-instances enables majority-decision fault masking: a corrupted instance
-(bit-flipped stack, code, or memory — paper §2.6 failure taxonomy) is
-out-voted and flagged, and the voted state can be re-broadcast
-("stopping of faulty computations").
+The ensemble is the *degenerate fleet case*: N lock-stepped replicas of one
+program stacked along the node axis of the fleet runtime
+(:mod:`repro.core.vm.fleet`), with majority voting over that axis instead of
+message routing.  The batched executor is shared with :class:`FleetVM` —
+one vmapped decoder serves single-node, ensemble, and sensor-network
+execution.  Running the *same* code frame on all replicas enables
+majority-decision fault masking: a corrupted instance (bit-flipped stack,
+code, or memory — paper §2.6 failure taxonomy) is out-voted and flagged, and
+the voted state can be re-broadcast ("stopping of faulty computations").
 """
 
 from __future__ import annotations
@@ -17,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import VMConfig
-from repro.core.vm.interp import Interpreter
+from repro.core.vm.fleet import get_fleet_kernels
 from repro.core.vm.vmstate import VMState
 
 
@@ -34,7 +37,7 @@ def replicate_state(st: VMState, n: int) -> VMState:
 
 
 class EnsembleVM:
-    """N lock-stepped VM instances with majority voting."""
+    """N lock-stepped VM replicas with majority voting — a routing-free fleet."""
 
     # State fields compared for the vote (the observable computation result).
     VOTE_FIELDS = ("ds", "dsp", "out", "outp", "pc", "tstatus", "mem")
@@ -43,17 +46,12 @@ class EnsembleVM:
         assert n >= 1
         self.cfg = cfg
         self.n = n
-        from repro.core.vm.interp import get_interpreter
-        self.interp = get_interpreter(cfg)
-        self._run_slice = jax.jit(
-            jax.vmap(lambda s: self.interp._run_slice(s, cfg.steps_per_slice)),
-        )
-        self._vmloop = jax.jit(
-            jax.vmap(lambda s: self.interp._vmloop(s, cfg.steps_per_slice)),
-        )
+        # Shared fleet kernels: same vmapped run_slice as FleetVM, no routing.
+        self.kernels = get_fleet_kernels(cfg)
+        self.interp = self.kernels.interp
 
     def run_slice(self, batched: VMState) -> VMState:
-        out, _ = self._run_slice(batched)
+        out, _ = self.kernels.batched_slice(batched, self.cfg.steps_per_slice)
         return out
 
     def checksum(self, batched: VMState) -> np.ndarray:

@@ -1,0 +1,94 @@
+"""Executor protocol — the pluggable slice engine behind every VM frontend.
+
+The paper's core claim is *operationally equivalent* software and hardware
+implementations of one VM.  This module turns that into an explicit seam:
+an :class:`Executor` advances a host-canonical ``VMState`` by one micro-slice
+(``schedule -> vmloop -> preempt``, Fig. 10) and every frontend — the single
+:class:`~repro.core.vm.machine.REXAVM`, the batched
+:class:`~repro.core.vm.fleet.FleetVM`, and the voting
+:class:`~repro.core.vm.ensemble.EnsembleVM` — drives whichever backend it is
+given:
+
+  * :class:`JitExecutor`    — the lax interpreter compiled by XLA
+                              ("hardware" role); state crosses host<->device
+                              around each slice and both directions are
+                              counted (``h2d``/``d2h``) so benchmarks can
+                              report the transfer cost the fleet avoids;
+  * :class:`OracleExecutor` — the plain-Python reference ("software" role),
+                              mutating the numpy state in place.
+
+Both produce byte-identical states (tests/test_vm_equivalence.py).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+from repro.config import VMConfig
+from repro.core.vm.spec import ISA
+from repro.core.vm import vmstate as vms
+from repro.core.vm.vmstate import VMState
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """One micro-slice of one VM over a host-canonical (numpy) state."""
+
+    backend: str
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        """Advance ``state`` by at most ``steps`` instructions of one task."""
+        ...
+
+
+class JitExecutor:
+    """XLA-compiled interpreter behind the host<->device copy boundary.
+
+    This is the seed repo's per-slice round trip, kept as the simple
+    single-node path: the whole machine state is pushed to the device,
+    one ``run_slice`` runs jitted, and the state is pulled back so the
+    host can service FIOS suspensions.  ``h2d``/``d2h`` count the copies —
+    the cost :class:`~repro.core.vm.fleet.FleetVM` exists to amortise.
+    """
+
+    backend = "jit"
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+        self.cfg = cfg
+        from repro.core.vm.interp import interp_for
+        self.interp = interp_for(cfg, isa)
+        self.h2d = 0               # host -> device full-state transfers
+        self.d2h = 0               # device -> host full-state transfers
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        dev = vms.to_device(state)
+        self.h2d += 1
+        dev, _ = self.interp.run_slice(dev, steps)
+        out = vms.to_numpy(dev)
+        self.d2h += 1
+        return out
+
+
+class OracleExecutor:
+    """Plain-Python reference interpreter (no device, no transfers)."""
+
+    backend = "oracle"
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+        self.cfg = cfg
+        from repro.core.vm.oracle import Oracle
+        self.oracle = Oracle(cfg, isa)
+        self.h2d = 0
+        self.d2h = 0
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        state, _ = self.oracle.run_slice(state, steps)
+        return state
+
+
+def make_executor(backend: str, cfg: VMConfig, isa: ISA | None = None) -> Executor:
+    if backend == "jit":
+        return JitExecutor(cfg, isa)
+    if backend == "oracle":
+        return OracleExecutor(cfg, isa)
+    raise ValueError(f"unknown VM backend {backend!r}")

@@ -1,0 +1,484 @@
+"""Device-resident VM fleet runtime — N cooperating REXAVM nodes, one executor.
+
+The paper's end state is a *distributed sensor network* of VM nodes
+exchanging active messages (§2, §3.4).  The seed repo could only run one
+``REXAVM`` through a host loop that copied the whole machine state
+host<->device every micro-slice; this module turns that into a fleet:
+
+  * ``FleetVM`` holds N heterogeneous node states as ONE stacked
+    :class:`~repro.core.vm.vmstate.VMState` with a leading node axis.  The
+    stack lives on the device; whole rounds (vmapped ``run_slice`` + message
+    routing + clock) run jitted, and the full state only syncs to the host
+    when a node actually suspends on host IO (FIOS / stream words).
+  * ``send``/``receive`` are routed **on device** through per-node mailbox
+    rings (``VMState.mbox``/``mbox_rd``/``mbox_wr``): a 64-node sensor
+    network runs whole message rounds without touching the host.  A full
+    destination mailbox applies backpressure (the sender stays suspended and
+    retries next round); an out-of-range destination drops the message.
+  * ``reference_round`` is the operational specification: the same round
+    semantics over N *independent* ``REXAVM`` instances exchanging messages
+    via the host.  tests/test_vm_fleet.py asserts byte-exact state equality
+    between the two — the fleet-level restatement of the paper's
+    software/hardware equivalence claim.
+
+Round semantics (mirrors ``REXAVM.run``, applied per node, lockstep):
+
+  1. one micro-slice per node (``schedule -> vmloop -> preempt``);
+  2. virtual clock advance: ``now += max(1, executed * us_per_instr // 1000)``;
+  3. message routing: all sends in (node, task) order, then all receives;
+  4. virtual-time warp to the earliest wake-up for nodes with no runnable
+     task, no routing progress and no IO suspension.
+
+The ensemble (paper §3.4 Parallel VM) is the degenerate fleet case: replicas
+of one program along the node axis with voting instead of routing — see
+:class:`repro.core.vm.ensemble.EnsembleVM`.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm.machine import REXAVM
+from repro.core.vm.spec import (
+    ISA,
+    ST_DONE,
+    ST_ERR,
+    ST_EVENT,
+    ST_HALT,
+    ST_IOWAIT,
+    ST_SLEEP,
+    ST_YIELD,
+    get_isa,
+)
+from repro.core.vm.vmstate import VMState
+
+I32 = jnp.int32
+_I32_MAX = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Jitted fleet kernels (shared per VMConfig, like get_interpreter)
+# ---------------------------------------------------------------------------
+
+class FleetKernels:
+    """Batched slice + routing + clock for one (VMConfig, ISA) pair.
+
+    ``batched_slice``  — vmapped ``run_slice`` over the node axis (also the
+                         ensemble's lockstep executor);
+    ``round``          — one full fleet round (slice, clock, routing, warp),
+                         pure JAX, state in / state out, device resident.
+    """
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+        self.cfg = cfg
+        self.isa = isa or get_isa()
+        from repro.core.vm.interp import interp_for
+        self.interp = interp_for(cfg, isa)
+        self._build()
+
+    def _build(self):
+        cfg = self.cfg
+        T = cfg.max_tasks
+        DS = cfg.ds_size
+        MB = cfg.mbox_size
+        OP_SEND = self.isa.opcode["send"]
+        OP_RECV = self.isa.opcode["receive"]
+        single_slice = self.interp.run_slice_fn
+
+        def batched_slice(S: VMState, steps: int):
+            return jax.vmap(lambda s: single_slice(s, steps))(S)
+
+        self.batched_slice = jax.jit(batched_slice, static_argnames=("steps",))
+
+        # -- on-device inter-node message routing ---------------------------
+
+        def route(S: VMState):
+            """All sends in (node, task) order, then all receives.
+
+            Returns (state, progress) where ``progress[i]`` is True when any
+            of node i's tasks was resumed this round (the per-node analogue
+            of ``REXAVM._service_io``'s return value).
+            """
+            N = S.pc.shape[0]
+
+            def send_body(k, carry):
+                S, progress = carry
+                i, t = k // T, k % T
+                is_send = (S.tstatus[i, t] == ST_IOWAIT) & (
+                    S.io_op[i, t] == OP_SEND
+                )
+                dsp = S.dsp[i, t]
+                # send ( v dst -- ): dst on top, both still on DS (pc rewound).
+                dst = S.ds[i, t, jnp.maximum(dsp - 1, 0)]
+                v = S.ds[i, t, jnp.maximum(dsp - 2, 0)]
+                dst_ok = (dst >= 0) & (dst < N)
+                dstc = jnp.clip(dst, 0, N - 1)
+                space = (S.mbox_wr[dstc] - S.mbox_rd[dstc]) < MB
+                deliver = is_send & dst_ok & space
+                # Full mailbox => backpressure (sender retries next round);
+                # invalid destination => message dropped, sender resumes.
+                resume = is_send & ((~dst_ok) | space)
+                slot = S.mbox_wr[dstc] % MB
+                row = jnp.where(deliver, dstc, N)       # N = dropped scatter
+                mbox = S.mbox.at[row, 2 * slot].set(I32(i), mode="drop")
+                mbox = mbox.at[row, 2 * slot + 1].set(v, mode="drop")
+                ri = jnp.where(resume, i, N)
+                S = S._replace(
+                    mbox=mbox,
+                    mbox_wr=S.mbox_wr.at[row].add(1, mode="drop"),
+                    dsp=S.dsp.at[ri, t].add(-2, mode="drop"),
+                    pc=S.pc.at[ri, t].add(1, mode="drop"),
+                    io_op=S.io_op.at[ri, t].set(0, mode="drop"),
+                    tstatus=S.tstatus.at[ri, t].set(ST_YIELD, mode="drop"),
+                )
+                progress = progress.at[ri].set(True, mode="drop")
+                return S, progress
+
+            def recv_body(k, carry):
+                S, progress = carry
+                i, t = k // T, k % T
+                is_recv = (S.tstatus[i, t] == ST_IOWAIT) & (
+                    S.io_op[i, t] == OP_RECV
+                )
+                avail = S.mbox_wr[i] > S.mbox_rd[i]
+                deliver = is_recv & avail
+                slot = S.mbox_rd[i] % MB
+                src = S.mbox[i, 2 * slot]
+                v = S.mbox[i, 2 * slot + 1]
+                ri = jnp.where(deliver, i, N)
+                dsp = S.dsp[i, t]
+                # receive ( -- src v ): push src, then the value.
+                ds = S.ds.at[ri, t, jnp.clip(dsp, 0, DS - 1)].set(
+                    src, mode="drop"
+                )
+                ds = ds.at[ri, t, jnp.clip(dsp + 1, 0, DS - 1)].set(
+                    v, mode="drop"
+                )
+                S = S._replace(
+                    ds=ds,
+                    dsp=S.dsp.at[ri, t].add(2, mode="drop"),
+                    mbox_rd=S.mbox_rd.at[ri].add(1, mode="drop"),
+                    pc=S.pc.at[ri, t].add(1, mode="drop"),
+                    io_op=S.io_op.at[ri, t].set(0, mode="drop"),
+                    tstatus=S.tstatus.at[ri, t].set(ST_YIELD, mode="drop"),
+                )
+                progress = progress.at[ri].set(True, mode="drop")
+                return S, progress
+
+            progress = jnp.zeros((N,), bool)
+            S, progress = jax.lax.fori_loop(0, N * T, send_body, (S, progress))
+            S, progress = jax.lax.fori_loop(0, N * T, recv_body, (S, progress))
+            return S, progress
+
+        def fleet_round(S: VMState, steps: int):
+            steps0 = S.steps
+            S, _ = batched_slice(S, steps)
+            # Virtual clock from the calibrated per-instruction time
+            # (REXAVM.run step 2, per node).
+            inc = jnp.maximum(1, (S.steps - steps0) * cfg.us_per_instr // 1000)
+            S = S._replace(now=S.now + inc)
+            S, progress = route(S)
+            # Virtual-time warp to the earliest wake-up (REXAVM.run step 4).
+            runnable = (S.tstatus == ST_YIELD).any(axis=1)
+            iowait = (S.tstatus == ST_IOWAIT).any(axis=1)
+            waiting = (S.tstatus == ST_SLEEP) | (S.tstatus == ST_EVENT)
+            wake = jnp.min(
+                jnp.where(waiting, S.timeout, _I32_MAX), axis=1
+            ).astype(I32)
+            warp = (
+                (~runnable)
+                & (~progress)
+                & (~iowait)
+                & waiting.any(axis=1)
+                & (wake > S.now)
+            )
+            return S._replace(now=jnp.where(warp, wake, S.now))
+
+        self.round = jax.jit(fleet_round, static_argnames=("steps",))
+
+
+@functools.lru_cache(maxsize=8)
+def get_fleet_kernels(cfg: VMConfig) -> FleetKernels:
+    """Fleet kernels are expensive to trace — share per VMConfig."""
+    return FleetKernels(cfg)
+
+
+# ---------------------------------------------------------------------------
+# FleetVM — the batched frontend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetResult:
+    rounds: int
+    steps: np.ndarray          # (N,) instructions executed per node
+    statuses: list[str]        # task-0 status per node
+    outputs: list[str]         # decoded output ring per node
+
+
+_STATUS_NAME = {
+    ST_DONE: "done",
+    ST_HALT: "halt",
+    ST_ERR: "error",
+}
+
+
+class FleetVM:
+    """N heterogeneous VM nodes as one device-resident stacked state.
+
+    Usage::
+
+        fleet = FleetVM(cfg, n=64)
+        for i, node in enumerate(fleet.nodes):   # nodes are real REXAVMs
+            node.launch(node.load(program_for(i)))
+        res = fleet.run(max_rounds=200)
+        print(res.outputs[0])
+
+    Nodes are programmed through their ordinary host frontends (``load``,
+    ``launch``, ``dios_add``, ``fios_add``); ``run`` stacks the states onto
+    the device and keeps them there across rounds.  ``send dst`` addresses
+    node ``dst`` by fleet index; messages route on device (see module doc).
+    Host IO (FIOS calls, ``out``/``in``) is detected by a cheap per-round
+    status probe and serviced through a full sync only when pending —
+    ``h2d``/``d2h`` count those full-state transfers.
+    """
+
+    def __init__(
+        self,
+        cfg: VMConfig | None = None,
+        n: int = 2,
+        lookup: str = "pht",
+        seed: int = 1,
+        nodes: list[REXAVM] | None = None,
+    ):
+        if nodes is not None:
+            assert len(nodes) >= 1
+            cfgs = {vm.cfg for vm in nodes}
+            if len(cfgs) != 1:
+                raise ValueError("fleet nodes must share one VMConfig")
+            self.cfg = nodes[0].cfg
+            self.nodes = list(nodes)
+        else:
+            self.cfg = cfg or VMConfig()
+            self.nodes = [
+                REXAVM(self.cfg, backend="jit", lookup=lookup, seed=seed + i)
+                for i in range(n)
+            ]
+        self.n = len(self.nodes)
+        isa = self.nodes[0].isa
+        if any(vm.isa is not isa for vm in self.nodes):
+            raise ValueError("fleet nodes must share one ISA")
+        # The cached kernels are built for the default ISA; a custom-ISA
+        # fleet needs its own build (opcode numbering differs).
+        if isa is get_isa():
+            self.kernels = get_fleet_kernels(self.cfg)
+        else:
+            self.kernels = FleetKernels(self.cfg, isa)
+        self._op_send = isa.opcode["send"]
+        self._op_recv = isa.opcode["receive"]
+        self._S: VMState | None = None     # device-resident stacked state
+        self.h2d = 0                       # full-state host -> device syncs
+        self.d2h = 0                       # full-state device -> host syncs
+        self.probes = 0                    # small status probes (tstatus/io_op)
+
+    @classmethod
+    def from_nodes(cls, nodes: list[REXAVM]) -> "FleetVM":
+        """Stack pre-configured REXAVM nodes into one fleet."""
+        return cls(nodes=nodes)
+
+    # -- state movement --------------------------------------------------------
+
+    def start(self) -> None:
+        """Stack per-node host states into the device-resident fleet state."""
+        self._S = VMState(
+            *[
+                jnp.stack([jnp.asarray(getattr(vm.state, f)) for vm in self.nodes])
+                for f in VMState._fields
+            ]
+        )
+        self.h2d += 1
+
+    def sync(self) -> None:
+        """Pull the stacked state back into the per-node host frontends."""
+        assert self._S is not None, "fleet not started"
+        host = [np.array(x) for x in self._S]
+        for i, vm in enumerate(self.nodes):
+            # np.array keeps 0-d fields as mutable 0-d arrays, not scalars.
+            vm.state = VMState(*[np.array(f[i]) for f in host])
+        self.d2h += 1
+
+    def push(self) -> None:
+        """Re-stack (possibly host-mutated) node states onto the device."""
+        self.start()
+
+    # -- execution -------------------------------------------------------------
+
+    def _probe(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Cheap device->host peek at scheduler-visible state (not a full sync)."""
+        self.probes += 1
+        # One batched fetch: three separate np.asarray calls would each block
+        # on their own device round trip.
+        return jax.device_get((self._S.tstatus, self._S.io_op, self._S.steps))
+
+    def _service_host_io(self) -> bool:
+        """Full sync + host service of FIOS/stream suspensions, then push."""
+        self.sync()
+        progress = False
+        for vm in self.nodes:
+            progress |= vm._service_io(route_net=False)
+        self.push()
+        return progress
+
+    def run(
+        self,
+        max_rounds: int = 10_000,
+        steps: int | None = None,
+        service_every: int = 1,
+    ) -> FleetResult:
+        """Run whole fleet rounds on device until all nodes finish.
+
+        ``service_every`` controls how often the host probes for pending host
+        IO; with pure compute + on-device messaging the state never leaves
+        the device between ``start`` and the final ``sync``.
+        """
+        steps = steps or self.cfg.steps_per_slice
+        if self._S is None:
+            self.start()
+        steps0 = np.asarray(self._S.steps).copy()
+        rounds = 0
+        stall = 0
+        last_steps_sum = -1
+        while rounds < max_rounds:
+            self._S = self.kernels.round(self._S, steps)
+            rounds += 1
+            if rounds % service_every != 0 and rounds < max_rounds:
+                continue
+            tstatus, io_op, steps_now = self._probe()
+            host_io = (
+                (tstatus == ST_IOWAIT)
+                & (io_op != 0)
+                & (io_op != self._op_send)
+                & (io_op != self._op_recv)
+            )
+            serviced = False
+            if host_io.any():
+                serviced = self._service_host_io()
+            # A node is finished only when task 0 is terminal AND no other
+            # task is runnable, waiting, or IO-suspended (REXAVM.run's
+            # "done" condition) — background workers keep the fleet alive.
+            task0_term = np.isin(tstatus[:, 0], (ST_DONE, ST_HALT, ST_ERR))
+            runnable = (tstatus == ST_YIELD).any(axis=1)
+            waiting = np.isin(tstatus, (ST_SLEEP, ST_EVENT)).any(axis=1)
+            iowait = (tstatus == ST_IOWAIT).any(axis=1)
+            if (task0_term & ~runnable & ~waiting & ~iowait).all():
+                break
+            steps_sum = int(steps_now.sum())
+            if steps_sum == last_steps_sum and not serviced:
+                stall += 1
+                if stall >= 3:
+                    break              # fleet-wide deadlock / quiescence
+            else:
+                stall = 0
+            last_steps_sum = steps_sum
+        self.sync()
+        executed = np.asarray(self._S.steps) - steps0
+        # Host frontends are canonical again; a later run() restacks them.
+        self._S = None
+        task0 = np.asarray([int(vm.state.tstatus[0]) for vm in self.nodes])
+        return FleetResult(
+            rounds=rounds,
+            steps=executed,
+            statuses=[_STATUS_NAME.get(s, "running") for s in task0],
+            outputs=[vm.output() for vm in self.nodes],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Host-routed reference (the operational specification of one fleet round)
+# ---------------------------------------------------------------------------
+
+def reference_round(nodes: list[REXAVM], steps: int | None = None) -> list[bool]:
+    """One fleet round over independent host-looped REXAVMs.
+
+    Numpy mirror of :meth:`FleetKernels.round`: slice every node, advance its
+    virtual clock, route all sends then all receives through the host (same
+    (node, task) order, same mailbox rings, same backpressure/drop rules),
+    then apply the per-node time warp.  ``FleetVM`` must match this
+    byte-exactly (tests/test_vm_fleet.py).  Returns the per-node progress
+    flags (mirrors the routing progress vector).
+    """
+    cfg = nodes[0].cfg
+    isa = nodes[0].isa
+    N, T = len(nodes), cfg.max_tasks
+    MB, DS = cfg.mbox_size, cfg.ds_size
+    op_send, op_recv = isa.opcode["send"], isa.opcode["receive"]
+    steps = steps or cfg.steps_per_slice
+
+    for vm in nodes:
+        before = int(vm.state.steps)
+        vm._slice(steps)
+        executed = int(vm.state.steps) - before
+        vm.state.now[...] = int(vm.state.now) + max(
+            1, executed * cfg.us_per_instr // 1000
+        )
+
+    progress = [False] * N
+    # Phase 1: all sends, (node, task) order.
+    for i, vm in enumerate(nodes):
+        st = vm.state
+        for t in range(T):
+            if int(st.tstatus[t]) != ST_IOWAIT or int(st.io_op[t]) != op_send:
+                continue
+            dsp = int(st.dsp[t])
+            dst = int(st.ds[t, max(dsp - 1, 0)])
+            v = int(st.ds[t, max(dsp - 2, 0)])
+            if 0 <= dst < N:
+                mst = nodes[dst].state
+                if int(mst.mbox_wr) - int(mst.mbox_rd) >= MB:
+                    continue           # backpressure: sender stays suspended
+                slot = int(mst.mbox_wr) % MB
+                mst.mbox[2 * slot] = i
+                mst.mbox[2 * slot + 1] = v
+                mst.mbox_wr[...] = int(mst.mbox_wr) + 1
+            st.dsp[t] = dsp - 2
+            st.pc[t] = int(st.pc[t]) + 1
+            st.io_op[t] = 0
+            st.tstatus[t] = ST_YIELD
+            progress[i] = True
+    # Phase 2: all receives.
+    for i, vm in enumerate(nodes):
+        st = vm.state
+        for t in range(T):
+            if int(st.tstatus[t]) != ST_IOWAIT or int(st.io_op[t]) != op_recv:
+                continue
+            if int(st.mbox_wr) <= int(st.mbox_rd):
+                continue               # empty mailbox: stay suspended
+            slot = int(st.mbox_rd) % MB
+            src, v = int(st.mbox[2 * slot]), int(st.mbox[2 * slot + 1])
+            # Same two-sided clamp as the device router's jnp.clip (a negative
+            # dsp must not wrap to the top of the numpy array).
+            st.ds[t, min(max(int(st.dsp[t]), 0), DS - 1)] = src
+            st.ds[t, min(max(int(st.dsp[t]) + 1, 0), DS - 1)] = v
+            st.dsp[t] = int(st.dsp[t]) + 2
+            st.mbox_rd[...] = int(st.mbox_rd) + 1
+            st.pc[t] = int(st.pc[t]) + 1
+            st.io_op[t] = 0
+            st.tstatus[t] = ST_YIELD
+            progress[i] = True
+    # Per-node time warp.
+    for i, vm in enumerate(nodes):
+        st = vm.state
+        sts = [int(s) for s in st.tstatus]
+        runnable = any(s == ST_YIELD for s in sts)
+        iowait = any(s == ST_IOWAIT for s in sts)
+        waiting = [k for k, s in enumerate(sts) if s in (ST_SLEEP, ST_EVENT)]
+        if not runnable and not progress[i] and not iowait and waiting:
+            wake = min(int(st.timeout[k]) for k in waiting)
+            if wake > int(st.now):
+                st.now[...] = wake
+    return progress

@@ -13,7 +13,10 @@ status vector instead of the paper's 2-bit mask (same semantics, testable
 against the Python oracle).
 
 Everything here is pure JAX; the only host interaction is servicing FIOS
-calls between loop rounds (see ``repro.core.vm.machine``).
+calls between loop rounds (see ``repro.core.vm.machine``).  The functional
+slice form ``run_slice_fn`` composes under ``vmap``: the fleet runtime
+(``repro.core.vm.fleet``) maps it over a node axis to run N VMs —
+sensor-network nodes or voting replicas — in one device program.
 """
 
 from __future__ import annotations
@@ -1041,6 +1044,10 @@ class Interpreter:
             return st, found
 
         self._run_slice = run_slice
+        # Public functional form: pure (state, steps) -> (state, found), safe
+        # to compose under jax.vmap/jit — the seam the fleet/ensemble batched
+        # executors are built on.
+        self.run_slice_fn = run_slice
 
 
 @functools.lru_cache(maxsize=8)
@@ -1048,3 +1055,12 @@ def get_interpreter(cfg: VMConfig) -> Interpreter:
     """Interpreters are expensive to trace/compile — share per VMConfig
     (the default ISA is a process-wide singleton)."""
     return Interpreter(cfg)
+
+
+def interp_for(cfg: VMConfig, isa: ISA | None = None) -> Interpreter:
+    """Shared interpreter-selection policy: the per-config cache for the
+    default ISA, a fresh build for a custom one.  Used by every executor
+    frontend (JitExecutor, FleetKernels) so they cannot diverge."""
+    if isa is None or isa is get_isa():
+        return get_interpreter(cfg)
+    return Interpreter(cfg, isa)

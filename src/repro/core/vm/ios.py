@@ -3,22 +3,33 @@
 ``FiosRegistry``  — host functions bridged into the word set (fiosAdd).
 ``DiosRegistry``  — host data arrays mapped into the VM address space
                     at ``MEM_BASE`` (diosAdd); e.g. the ADC sample buffer.
+``HostLink``      — host-side message bus between REXAVM nodes: wires each
+                    node's ``send`` into the destination's ``recv_queue``.
 
 Device-side execution of a FIOS word suspends the task (``ST_IOWAIT`` — the
 paper's "leaving the current VM interpreter loop round"); the host service
 loop pops arguments from the data stack, invokes the callback, pushes the
 result, and resumes.  This *is* the paper's nested-execution-loop design
 (Fig. 10) and is what makes the interpreter fully jittable.
+
+``send``/``receive`` between nodes have two transports: ``HostLink`` (every
+message takes a host round trip — the seed behaviour, kept as the simple
+path) and the device-resident mailbox rings of
+:class:`repro.core.vm.fleet.FleetVM`, which route whole message rounds
+on device without leaving XLA.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import numpy as np
 
 from repro.core.vm.spec import FIOS_BASE, MAX_FIOS, MEM_BASE
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.vm.machine import REXAVM
 
 
 @dataclass
@@ -95,3 +106,31 @@ class DiosRegistry:
         """Write headers for all registered arrays into a mem buffer."""
         for e in self.entries.values():
             mem[e.offset - 1] = e.cells
+
+
+class HostLink:
+    """Host-routed inter-node message bus (the pre-fleet transport).
+
+    Wires every node's ``on_send`` callback so that ``v dst send`` lands in
+    node ``dst``'s ``recv_queue`` tagged with the sender's index;
+    out-of-range destinations are dropped and recorded.  Unlike the fleet's
+    on-device mailbox rings, ``recv_queue`` is unbounded — there is no
+    backpressure, so a flooding sender is never throttled.  Each message
+    costs a host round trip per node slice; use
+    :class:`repro.core.vm.fleet.FleetVM` to keep whole message rounds on
+    device.
+    """
+
+    def __init__(self, nodes: "list[REXAVM]"):
+        self.nodes = list(nodes)
+        self.dropped: list[tuple[int, int, int]] = []   # (src, dst, value)
+        for src, vm in enumerate(self.nodes):
+            vm.on_send = self._make_on_send(src)
+
+    def _make_on_send(self, src: int) -> Callable[[int, int], None]:
+        def on_send(dst: int, value: int) -> None:
+            if 0 <= dst < len(self.nodes):
+                self.nodes[dst].recv_queue.append((src, value))
+            else:
+                self.dropped.append((src, dst, value))
+        return on_send

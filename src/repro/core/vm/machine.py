@@ -1,17 +1,22 @@
 """REXAVM facade — the system call-gate interface (paper §3.7, Fig. 7a).
 
-``REXAVM`` bundles compiler + interpreter + IOS registries behind one object,
+``REXAVM`` bundles compiler + executor + IOS registries behind one object,
 the shared-memory ``vmsys`` design: the host application compiles code frames
 (active messages are *text only* — paper's robustness feature 2), runs
 micro-slices, services FIOS calls between slices (the nested IO service loop
 of Fig. 10), and reads the output ring.
 
-Backends:
-  * ``jit``    — the lax-based interpreter compiled by XLA ("hardware" role);
-  * ``oracle`` — the plain-Python reference ("software" role).
+Slice execution is delegated to an :class:`~repro.core.vm.executor.Executor`:
+
+  * ``jit``    — :class:`JitExecutor`, the lax interpreter compiled by XLA
+                 ("hardware" role), one host<->device round trip per slice;
+  * ``oracle`` — :class:`OracleExecutor`, the plain-Python reference
+                 ("software" role).
 
 Both produce byte-identical VM states (tested), reproducing the paper's
-operational software/hardware equivalence.
+operational software/hardware equivalence.  For N cooperating nodes with
+device-resident state, see :class:`repro.core.vm.fleet.FleetVM`, which runs
+the same interpreter batched over a node axis.
 """
 
 from __future__ import annotations
@@ -23,10 +28,9 @@ import numpy as np
 
 from repro.config import VMConfig
 from repro.core.vm.compiler import Compiler
+from repro.core.vm.executor import Executor, make_executor
 from repro.core.vm.frames import CodeFrame, FrameManager
-from repro.core.vm.interp import Interpreter
 from repro.core.vm.ios import DiosRegistry, FiosRegistry
-from repro.core.vm.oracle import Oracle
 from repro.core.vm.spec import (
     FIOS_BASE,
     ISA,
@@ -70,16 +74,10 @@ class REXAVM:
         self.dios = DiosRegistry(self.cfg.mem_size)
         self.compiler = Compiler(self.isa, self.fios, self.dios, lookup=lookup)
         self.frames = FrameManager(self.cfg.cs_size)
-        if backend == "jit":
-            if isa is None:
-                from repro.core.vm.interp import get_interpreter
-                self.interp = get_interpreter(self.cfg)
-            else:
-                self.interp = Interpreter(self.cfg, self.isa)
-            self.oracle = None
-        else:
-            self.interp = None
-            self.oracle = Oracle(self.cfg, self.isa)
+        self.executor: Executor = make_executor(backend, self.cfg, isa)
+        # Backend internals, kept addressable for tests/tools.
+        self.interp = getattr(self.executor, "interp", None)
+        self.oracle = getattr(self.executor, "oracle", None)
         # Host-canonical numpy state.
         self.state: VMState = vms.to_numpy(vms.init_state(self.cfg, seed))
         # Cell 0 = canonical `end` (task return-to-zero convention).
@@ -143,21 +141,23 @@ class REXAVM:
         self.state = vms.launch_task(self.state, task, frame.entry, prio, deadline)
 
     def _slice(self, steps: int) -> None:
-        if self.backend == "jit":
-            dev = vms.to_device(self.state)
-            dev, _ = self.interp.run_slice(dev, steps)
-            self.state = vms.to_numpy(dev)
-        else:
-            self.state, _ = self.oracle.run_slice(self.state, steps)
+        self.state = self.executor.run_slice(self.state, steps)
 
-    def _service_io(self) -> bool:
-        """Service FIOS/stream suspensions.  Returns True if any progress."""
+    def _service_io(self, route_net: bool = True) -> bool:
+        """Service FIOS/stream suspensions.  Returns True if any progress.
+
+        ``route_net=False`` leaves ``send``/``receive`` suspensions alone —
+        used by the fleet runtime, which routes those on device through the
+        per-node mailbox rings instead of through host queues.
+        """
         st = self.state
         progress = False
         for t in range(self.cfg.max_tasks):
             if int(st.tstatus[t]) != ST_IOWAIT or int(st.io_op[t]) == 0:
                 continue
             opcode = int(st.io_op[t])
+            if not route_net and opcode in (self._op_send, self._op_receive):
+                continue
 
             def resume(advance: bool = True):
                 st.io_op[t] = 0

@@ -1,9 +1,17 @@
 """Device-resident VM state (a pytree) and host<->device conversion.
 
 The whole machine — code segment, stacks, task table, event table, output
-ring — is one NamedTuple of arrays, so it can be jitted over, vmapped into a
-parallel-VM ensemble (paper §3.4) and checkpointed/restored byte-exactly
-(paper resilience feature 5: stop-and-go processing).
+ring, inter-node mailbox — is one NamedTuple of arrays, so it can be jitted
+over, vmapped into a parallel-VM ensemble (paper §3.4), stacked along a
+leading node axis into a device-resident fleet (``repro.core.vm.fleet``) and
+checkpointed/restored byte-exactly (paper resilience feature 5: stop-and-go
+processing).
+
+The ``mbox``/``mbox_rd``/``mbox_wr`` fields are the per-node mailbox ring
+for fleet ``send``/``receive`` routing: ``mbox`` holds ``[src, value]``
+pairs, the counters are monotonic (slot = counter % mbox_size).  A single
+host-looped REXAVM leaves them untouched (messages go through the host
+queues instead).
 """
 
 from __future__ import annotations
@@ -49,6 +57,10 @@ class VMState(NamedTuple):
     rng: jnp.ndarray         # () uint32 LCG state
     out: jnp.ndarray         # (OUT*2,) int32 output ring: [kind, value] pairs
     outp: jnp.ndarray        # () int32 entries written (pairs)
+    # inter-node mailbox ring (fleet send/receive routing, paper §3.4 networks)
+    mbox: jnp.ndarray        # (MBOX*2,) int32 mailbox ring: [src, value] pairs
+    mbox_rd: jnp.ndarray     # () int32 messages consumed (monotonic)
+    mbox_wr: jnp.ndarray     # () int32 messages delivered (monotonic)
 
 
 def init_state(cfg: VMConfig, seed: int = 1) -> VMState:
@@ -81,6 +93,9 @@ def init_state(cfg: VMConfig, seed: int = 1) -> VMState:
         rng=jnp.uint32(seed),
         out=jnp.zeros(cfg.out_ring_size * 2, jnp.int32),
         outp=jnp.int32(0),
+        mbox=jnp.zeros(cfg.mbox_size * 2, jnp.int32),
+        mbox_rd=jnp.int32(0),
+        mbox_wr=jnp.int32(0),
     )
 
 

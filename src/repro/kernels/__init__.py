@@ -10,6 +10,19 @@ kernel vs jnp path via ``repro.kernels.use_kernels()``.
 """
 
 import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams across versions;
+# resolve whichever this jax ships so every kernel builds on either side.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable constructor for Pallas TPU compiler params."""
+    return CompilerParams(**kwargs)
+
 
 _FORCE = None  # None = auto (TPU only), True/False = override
 

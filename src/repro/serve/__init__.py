@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.vmhook import FleetServeMonitor
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "FleetServeMonitor"]

@@ -2,9 +2,11 @@
 
 The engine accepts batched requests (prompt token arrays), right-pads them
 into a rectangle, prefim-fills via teacher-forced decode steps (prompt
-replay), then decodes new tokens.  It exposes per-step hooks so the VM
-"measuring job" example can drive serving through the IOS (paper C9:
-host functions bound into the word set).
+replay), then decodes new tokens.  It exposes a per-step hook (``on_step``)
+so a VM "measuring job" can observe serving through the IOS (paper C9: host
+functions bound into the word set) — see
+:class:`repro.serve.vmhook.FleetServeMonitor`, which runs the measuring
+jobs of all monitor nodes as one device-resident fleet.
 """
 
 from __future__ import annotations
@@ -34,6 +36,7 @@ class ServeEngine:
         params: Any,
         serve_cfg: ServeConfig = ServeConfig(),
         max_len: int = 512,
+        on_step: Optional[Callable[[ServeStats], None]] = None,
     ):
         self.model = model
         self.params = params
@@ -41,6 +44,9 @@ class ServeEngine:
         self.max_len = max_len
         self._decode = jax.jit(model.decode_step)
         self.stats = ServeStats()
+        # Called after every decode step with the running stats (the VM
+        # measuring-job attachment point).
+        self.on_step = on_step
 
     def generate(
         self,
@@ -98,4 +104,6 @@ class ServeEngine:
             )
             self.stats.decode_tokens += int((~done).sum())
             self.stats.steps += 1
+            if self.on_step is not None:
+                self.on_step(self.stats)
         return outs

@@ -5,6 +5,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dependency (see pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

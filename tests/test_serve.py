@@ -62,3 +62,26 @@ class TestServe:
         qparams = quantize_params(params)
         errs = quantization_error(params, qparams)
         assert errs and max(errs.values()) < 0.02
+
+
+class TestVMMeasuringJob:
+    def test_fleet_monitor_reports_decode_deltas(self):
+        """The VM 'measuring job' hook: a fleet of monitor nodes observes the
+        engine via DIOS and reports per-step decode-token deltas."""
+        from repro.config import VMConfig
+        from repro.serve.vmhook import FleetServeMonitor
+
+        # Same VMConfig values as tests/test_vm_fleet.py -> cached kernels.
+        cfg = VMConfig(cs_size=2048, steps_per_slice=64, mbox_size=4)
+        monitor = FleetServeMonitor(n=2, cfg=cfg)
+        model = build_model(TINY)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(
+            model, params, ServeConfig(temperature=0.0), max_len=64,
+            on_step=monitor,
+        )
+        engine.generate([[1, 2, 3]], max_new_tokens=4)
+        assert monitor.steps_seen == 4
+        reports = monitor.reports()
+        # Every monitor node saw one new decode token per engine step.
+        assert reports == [[1, 1, 1, 1]] * 2

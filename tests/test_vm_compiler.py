@@ -3,6 +3,7 @@ code frames and dictionary (paper §3.1, §3.9, §3.11)."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dependency (see pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 from repro.config import VMConfig

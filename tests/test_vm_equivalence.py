@@ -8,6 +8,7 @@ programs, including randomized programs (hypothesis).
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dependency (see pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 from repro.config import VMConfig

@@ -1,0 +1,250 @@
+"""Fleet runtime tests: device-routed multi-node networks must be
+byte-identical to N independent REXAVM instances exchanging the same
+messages via the host (`reference_round` — the operational specification),
+and must keep the state on device between rounds.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import VMConfig
+from repro.core.vm import (
+    REXAVM,
+    EnsembleVM,
+    FleetVM,
+    HostLink,
+    reference_round,
+    replicate_state,
+)
+from repro.core.vm import vmstate as vms
+from repro.core.vm.spec import ST_DONE, ST_HALT, ST_IOWAIT
+from repro.core.vm.vmstate import VMState
+
+# One config for every fleet test: get_fleet_kernels caches per VMConfig, so
+# all tests share a single traced interpreter (a second trace happens per
+# distinct node count only).
+CFG = VMConfig(cs_size=2048, steps_per_slice=64, mbox_size=4)
+
+
+def ring_program(i: int, n: int) -> str:
+    """Token ring: node 0 injects 1; each node prints the sender, adds one,
+    forwards to the next node; node 0 finally prints (src, token)."""
+    if i == 0:
+        return f"1 {1 % n} send receive swap . . halt"
+    return f"receive swap . 1+ {(i + 1) % n} send halt"
+
+
+def make_fleet(progs: list[str]) -> FleetVM:
+    fleet = FleetVM(CFG, n=len(progs))
+    for node, prog in zip(fleet.nodes, progs):
+        node.launch(node.load(prog))
+    return fleet
+
+
+def make_reference(progs: list[str]) -> list[REXAVM]:
+    nodes = [REXAVM(CFG, backend="jit", seed=1 + i) for i in range(len(progs))]
+    for node, prog in zip(nodes, progs):
+        node.launch(node.load(prog))
+    return nodes
+
+
+def assert_states_equal(fleet: FleetVM, ref: list[REXAVM]):
+    """Byte-exact equality of every VMState field, mailboxes included."""
+    for i, (a, b) in enumerate(zip(fleet.nodes, ref)):
+        for f in VMState._fields:
+            av, bv = np.asarray(getattr(a.state, f)), np.asarray(getattr(b.state, f))
+            assert np.array_equal(av, bv), (
+                f"node {i} field {f} diverged:\n{av}\n{bv}"
+            )
+
+
+def run_lockstep(fleet: FleetVM, ref: list[REXAVM], rounds: int):
+    """Drive fleet rounds on device and reference rounds on host."""
+    fleet.start()
+    for _ in range(rounds):
+        fleet._S = fleet.kernels.round(fleet._S, CFG.steps_per_slice)
+    fleet.sync()
+    for _ in range(rounds):
+        reference_round(ref, CFG.steps_per_slice)
+
+
+class TestFleetEquivalence:
+    def test_ring_matches_host_routed_reference(self):
+        """Multi-node ring routed on device == host-routed REXAVMs."""
+        progs = [ring_program(i, 6) for i in range(6)]
+        fleet, ref = make_fleet(progs), make_reference(progs)
+        run_lockstep(fleet, ref, rounds=16)
+        assert_states_equal(fleet, ref)
+        # The network actually completed (not vacuous equality).
+        assert int(fleet.nodes[0].state.tstatus[0]) == ST_HALT
+        assert fleet.nodes[0].output() == "5 6 "
+
+    def test_heterogeneous_tasks_sleep_and_messages(self):
+        """Mixed workload: multi-tasking, sleeps (time warp), messaging."""
+        progs = [
+            # node 0: spawn a worker task, main task waits for two messages.
+            ": worker 40 sleep 7 1 send ; "
+            "0 0 $ worker task drop receive . . receive . . halt",
+            # node 1: reply to each message from node 0.
+            "receive 1+ swap send 5 sleep 99 0 send halt",
+            # node 2: pure compute, no messaging.
+            "0 100 0 do 1+ loop . halt",
+        ]
+        fleet, ref = make_fleet(progs), make_reference(progs)
+        run_lockstep(fleet, ref, rounds=24)
+        assert_states_equal(fleet, ref)
+        assert int(fleet.nodes[2].state.tstatus[0]) == ST_HALT
+
+    def test_invalid_destination_dropped(self):
+        """Out-of-range dst drops the message but resumes the sender —
+        identically on device and host."""
+        progs = ["5 99 send 1 . halt", "0 200 0 do 1+ loop . halt"]
+        fleet, ref = make_fleet(progs), make_reference(progs)
+        run_lockstep(fleet, ref, rounds=8)
+        assert_states_equal(fleet, ref)
+        assert int(fleet.nodes[0].state.tstatus[0]) == ST_HALT
+
+    def test_mailbox_backpressure(self):
+        """More in-flight messages than mbox_size: the sender stalls until
+        the receiver drains; nothing is lost or reordered."""
+        n_msgs = 10  # >> mbox_size = 4
+        progs = [
+            ": spray 0 " + f"{n_msgs} 0 do dup 1 send 1+ loop ; spray drop halt",
+            f"{n_msgs} 0 do receive . drop loop halt",
+        ]
+        fleet, ref = make_fleet(progs), make_reference(progs)
+        run_lockstep(fleet, ref, rounds=40)
+        assert_states_equal(fleet, ref)
+        out = ref[1].output()
+        assert out == "".join(f"{k} " for k in range(n_msgs))
+        assert fleet.nodes[1].output() == out
+
+
+class TestFleet64Nodes:
+    def test_64_node_ring_on_device(self):
+        """Acceptance: a 64-node sensor-network-style program with on-device
+        send/receive routing, bit-exact vs 64 host-routed REXAVMs, with the
+        whole run staying on device (one stack up, one sync down)."""
+        n = 64
+        progs = [ring_program(i, n) for i in range(n)]
+        fleet = make_fleet(progs)
+        res = fleet.run(max_rounds=300)
+        # One h2d (start) + one d2h (final sync): no per-slice round trips.
+        assert fleet.h2d == 1 and fleet.d2h == 1
+        assert res.statuses == ["halt"] * n
+        assert res.outputs[0] == f"{n - 1} {n} "
+        # Bit-exact vs the host-routed reference over the same round count.
+        ref = make_reference(progs)
+        for _ in range(res.rounds):
+            reference_round(ref, CFG.steps_per_slice)
+        for i in range(n):
+            for f in VMState._fields:
+                if f in ("out", "outp"):   # fleet.run() drained its rings
+                    continue
+                av = np.asarray(getattr(fleet.nodes[i].state, f))
+                bv = np.asarray(getattr(ref[i].state, f))
+                assert np.array_equal(av, bv), f"node {i} field {f}"
+        assert res.outputs == [vm.output() for vm in ref]
+        # The old path moves the full state host<->device twice per slice.
+        ref_transfers = sum(vm.executor.h2d + vm.executor.d2h for vm in ref)
+        fleet_transfers = fleet.h2d + fleet.d2h
+        assert fleet_transfers < ref_transfers / 10
+
+
+class TestFleetHostIO:
+    def test_fios_and_streams_serviced_on_suspend(self):
+        """FIOS calls + `out` still work: the fleet syncs to host only when a
+        node suspends on host IO, services it, and pushes back."""
+        n = 3
+        fleet = FleetVM(CFG, n=n)
+        for i, node in enumerate(fleet.nodes):
+            node.dios_add("samples", np.zeros(8, np.int32))
+            node.dios_add("ready", np.array([0], np.int32))
+
+            def adc(scale, node=node, i=i):
+                node.dios_write(
+                    "samples", (np.arange(8, dtype=np.int32) * scale * (i + 1))
+                )
+                node.dios_write("ready", [1])
+
+            node.fios_add("adc", adc, args=1, ret=0)
+            node.launch(node.load(
+                "2 adc 1000 1 ready await drop samples vecmax out halt"
+            ))
+        res = fleet.run(max_rounds=100)
+        assert res.statuses == ["halt"] * n
+        # argmax of 0,2,4,... is index 7 for every node (host stream `out`).
+        assert [vm.out_stream for vm in fleet.nodes] == [[7]] * n
+        # Host IO forced at least one full sync beyond start/final.
+        assert fleet.h2d >= 2 and fleet.d2h >= 2
+
+    def test_run_waits_for_background_workers(self):
+        """run() must not stop while spawned tasks are still live, even when
+        every node's task 0 is already terminal (REXAVM.run 'done' rule)."""
+        fleet = make_fleet([
+            # task 0 halts immediately; the worker delivers after a sleep.
+            ": worker 30 sleep 7 1 send ; 0 0 $ worker task drop halt",
+            ": getter receive swap . . ; 0 0 $ getter task drop halt",
+        ])
+        res = fleet.run(max_rounds=60)
+        assert res.statuses == ["halt", "halt"]
+        # The worker's message made it to node 1's background receiver
+        # (prints sender 0, then value 7).
+        assert res.outputs[1] == "0 7 "
+
+    def test_hostlink_host_transport(self):
+        """The pre-fleet transport: HostLink wires send -> recv_queue across
+        host-looped REXAVMs (no device routing, no backpressure)."""
+        a = REXAVM(CFG, backend="jit", seed=1)
+        b = REXAVM(CFG, backend="jit", seed=2)
+        link = HostLink([a, b])
+        a.launch(a.load("7 1 send 42 9 send halt"))   # second send: bad dst
+        b.launch(b.load("receive . . halt"))
+        for _ in range(10):
+            a._slice(CFG.steps_per_slice)
+            a._service_io()
+            b._slice(CFG.steps_per_slice)
+            b._service_io()
+            if int(b.state.tstatus[0]) == ST_HALT:
+                break
+        assert b.output() == "7 0 "          # value, then sender index
+        assert link.dropped == [(0, 9, 42)]  # out-of-range dst recorded
+
+    def test_run_is_restartable(self):
+        """run() leaves host frontends canonical; a second phase continues."""
+        fleet = make_fleet(["1 . halt", "2 . halt"])
+        r1 = fleet.run(max_rounds=10)
+        assert r1.outputs == ["1 ", "2 "]
+        for node in fleet.nodes:
+            node.state.tstatus[0] = 7  # ST_YIELD: rerun the same frame
+            node.state.pc[0] = 1
+        r2 = fleet.run(max_rounds=10)
+        assert r2.outputs == ["1 ", "2 "]
+
+
+class TestEnsembleDegenerateFleet:
+    def test_replicas_match_independent_vms(self):
+        """Lockstep replicas over the fleet's node axis == N single REXAVMs."""
+        prog = ": f dup * 1+ ; 0 30 0 do drop i f loop ."
+        vm = REXAVM(CFG, backend="jit", seed=1)
+        frame = vm.load(prog)
+        vm.launch(frame)
+        n = 3
+        ens = EnsembleVM(CFG, n=n)
+        batched = replicate_state(vms.to_device(vm.state), n)
+        for _ in range(4):
+            batched = ens.run_slice(batched)
+        # Reference: the very same REXAVM advanced slice by slice.
+        for _ in range(4):
+            vm._slice(CFG.steps_per_slice)
+        for f in VMState._fields:
+            bf = np.asarray(getattr(batched, f))
+            sf = np.asarray(getattr(vm.state, f))
+            for k in range(n):
+                assert np.array_equal(bf[k], sf), f"replica {k} field {f}"
+        assert int(np.asarray(batched.tstatus)[0, 0]) == ST_DONE
+
+    def test_ensemble_and_fleet_share_kernels(self):
+        ens = EnsembleVM(CFG, n=3)
+        fleet = FleetVM(CFG, n=3)
+        assert ens.kernels is fleet.kernels
