@@ -26,6 +26,11 @@ from repro.core.vm.spec import ST_DONE, ST_ERR, ST_HALT
 
 BENCH_PROG = ": work 0 begin 1+ dup 1000 >= until drop ; work work work work"
 
+# Structured results filled by run() — benchmarks/run.py dumps this to
+# BENCH_vm.json so the perf trajectory (steps/s, transfers, bytes) is
+# tracked across PRs.
+METRICS: dict = {}
+
 
 def mwps(backend: str, steps_budget: int = 200_000) -> tuple[float, int]:
     """Returns (MWPS, full-state host<->device transfers)."""
@@ -61,7 +66,7 @@ def mwps_ensemble(n: int = 32) -> tuple[float, float]:
     return total / dt / 1e6, per_slice * iters / dt / 1e6
 
 
-def bench_fleet(n: int = 64) -> tuple[float, float, int, int]:
+def bench_fleet(n: int = 64) -> tuple[float, float, int, int, int, int]:
     """Sensor-network message round: a token circles an n-node ring, each
     hop incrementing it — the paper's message-bound distributed regime
     (nodes mostly suspended on ``receive``, micro-slicing).  The same
@@ -74,7 +79,8 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int]:
         routed in Python).
 
     Returns (fleet steps/s, host-loop steps/s, fleet transfers, host-loop
-    transfers).  Note: on CPU the vmapped decoder serialises compute-bound
+    transfers, fleet bytes, host-loop bytes).
+    Note: on CPU the vmapped decoder serialises compute-bound
     lanes, so the fleet's edge is the eliminated per-slice transfer + host
     service overhead; on accelerators the lanes parallelise as well."""
     cfg = VMConfig(cs_size=2048, steps_per_slice=64)
@@ -107,6 +113,7 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int]:
     dt_fleet = time.perf_counter() - t0
     fleet_steps = int(res.steps.sum())
     fleet_xfer = fleet.h2d + fleet.d2h
+    fleet_bytes = fleet.h2d_bytes + fleet.d2h_bytes
 
     nodes = build("host")
     steps0 = sum(int(vm.state.steps) for vm in nodes)
@@ -119,8 +126,60 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int]:
     dt_host = time.perf_counter() - t0
     host_steps = sum(int(vm.state.steps) for vm in nodes) - steps0
     host_xfer = sum(vm.executor.h2d + vm.executor.d2h for vm in nodes)
+    host_bytes = sum(
+        vm.executor.h2d_bytes + vm.executor.d2h_bytes for vm in nodes
+    )
+    METRICS["vm_fleet64_network"] = {
+        "nodes": n,
+        "fleet_steps_per_s": fleet_steps / dt_fleet,
+        "host_steps_per_s": host_steps / dt_host,
+        "fleet_transfers": fleet_xfer,
+        "host_transfers": host_xfer,
+        "fleet_bytes": fleet_bytes,
+        "host_bytes": host_bytes,
+    }
     return (fleet_steps / dt_fleet, host_steps / dt_host,
-            fleet_xfer, host_xfer)
+            fleet_xfer, host_xfer, fleet_bytes, host_bytes)
+
+
+def bench_fleet_io(n: int = 8, n_suspended: int = 2) -> tuple[int, int]:
+    """The partial-IO win: ``n_suspended`` of ``n`` nodes block on a FIOS
+    call while the rest compute.  Returns IO-service bytes for the
+    partial-state path vs PR 1's full-state sync on the same workload."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+
+    def build(io_mode: str) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, io_mode=io_mode)
+        for i, node in enumerate(fleet.nodes):
+            if i < n_suspended:
+                node.dios_add("ready", np.array([0], np.int32))
+                node.fios_add(
+                    "ping", lambda node=node: node.dios_write("ready", [1])
+                )
+                node.launch(node.load("ping 1000 1 ready await drop 5 . halt"))
+            else:
+                node.launch(node.load("0 50 0 do 1+ loop . halt"))
+        return fleet
+
+    partial = build("partial")
+    partial.run(max_rounds=60)
+    partial_bytes = partial.io_d2h_bytes + partial.io_h2d_bytes
+    full = build("full")
+    base_h2d, base_d2h = full.h2d_bytes, full.d2h_bytes
+    full.run(max_rounds=60)
+    # Full-sync IO bytes = everything beyond the one start + one final sync.
+    from repro.core.vm.vmstate import state_nbytes
+    full_state = state_nbytes(full.nodes[0].state) * n
+    full_bytes = (full.h2d_bytes + full.d2h_bytes
+                  - base_h2d - base_d2h - 2 * full_state)
+    METRICS["vm_fleet_io_partial"] = {
+        "nodes": n,
+        "suspended": n_suspended,
+        "partial_io_bytes": partial_bytes,
+        "full_sync_io_bytes": full_bytes,
+        "io_services": partial.io_service.services,
+    }
+    return partial_bytes, full_bytes
 
 
 def mcps(lookup: str = "pht") -> float:
@@ -152,13 +211,21 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("vm_mwps_ensemble32", 1.0 / agg,
                  f"{agg:.3f} MWPS aggregate over 32 lock-stepped VMs "
                  f"({single:.3f} per instance)"))
-    f_sps, h_sps, f_xfer, h_xfer = bench_fleet(64)
+    f_sps, h_sps, f_xfer, h_xfer, f_bytes, h_bytes = bench_fleet(64)
     rows.append(("vm_fleet64_network", 1e6 / f_sps,
                  f"{f_sps:.0f} steps/s device-resident 64-node network "
-                 f"({f_xfer} full-state transfers) vs {h_sps:.0f} steps/s "
-                 f"({h_xfer} transfers) seed per-slice host loop"))
+                 f"({f_xfer} full-state transfers / {f_bytes} B) vs "
+                 f"{h_sps:.0f} steps/s ({h_xfer} transfers / {h_bytes} B) "
+                 f"seed per-slice host loop"))
+    p_bytes, fs_bytes = bench_fleet_io(8, 2)
+    rows.append(("vm_fleet_io_partial", float(p_bytes),
+                 f"{p_bytes} B partial-state IO service vs {fs_bytes} B "
+                 f"full-state sync (2 of 8 nodes suspended)"))
     c_pht = mcps("pht")
     rows.append(("compiler_mcps_pht", 1.0 / c_pht, f"{c_pht:.3f} MCPS (perfect hash)"))
     c_lst = mcps("lst")
     rows.append(("compiler_mcps_lst", 1.0 / c_lst, f"{c_lst:.3f} MCPS (linear search table)"))
+    METRICS["vm_mwps"] = {"oracle": m_o, "jit": m_j, "jit_transfers": xfer_j,
+                          "ensemble32_aggregate": agg}
+    METRICS["compiler_mcps"] = {"pht": c_pht, "lst": c_lst}
     return rows

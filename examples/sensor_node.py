@@ -15,10 +15,12 @@ syncs on IO suspension.
     PYTHONPATH=src python examples/sensor_node.py
 """
 
+import jax
 import numpy as np
 
 from repro.config import VMConfig
 from repro.core.vm import FleetVM, REXAVM
+from repro.launch.mesh import make_node_mesh
 
 CFG = VMConfig(cs_size=8192, steps_per_slice=2048)
 
@@ -70,7 +72,11 @@ def main():
     n_sensors = len(defects)
     collector = n_sensors                      # last fleet index
 
-    fleet = FleetVM(CFG, n=n_sensors + 1)
+    # On a multi-device host (e.g. XLA_FLAGS=--xla_force_host_platform_
+    # device_count=8) the node axis shards across the mesh; on one device
+    # the same code runs unsharded.  Non-divisible fleets replicate.
+    mesh = make_node_mesh() if len(jax.devices()) > 1 else None
+    fleet = FleetVM(CFG, n=n_sensors + 1, mesh=mesh)
     for i, defect in enumerate(defects):
         node = fleet.nodes[i]
         wire_sensor(node, defect)
@@ -90,9 +96,17 @@ def main():
               f"{peak_amp:8d}  {est:12.2f}")
     print(f"\ncollector (node {collector}) received via on-device routing:")
     print(res.outputs[collector])
+    from repro.core.vm.vmstate import state_nbytes
+    stats = fleet.transfer_stats()
+    full_state = state_nbytes(fleet.nodes[0].state) * fleet.n
     print(f"[fleet] {res.rounds} rounds, "
           f"{fleet.h2d} h2d / {fleet.d2h} d2h full-state syncs "
           f"(vs {2 * res.rounds * (n_sensors + 1)} for per-slice host loops)")
+    print(f"[fleet] partial IO service: {stats['io_services']} services, "
+          f"{stats['io_nodes_serviced']} node-slices, "
+          f"{stats['io_d2h_bytes'] + stats['io_h2d_bytes']} B moved "
+          f"(full-state sync would move "
+          f"{stats['io_services'] * 2 * full_state} B)")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,17 @@ from repro.core.vm.spec import (
 )
 from repro.core.vm.compiler import Compiler, CompileError, tokenize
 from repro.core.vm.frames import CodeFrame, FrameManager, Dictionary
-from repro.core.vm.ios import FiosRegistry, DiosRegistry, HostLink
+from repro.core.vm.ios import FiosRegistry, DiosRegistry, FleetIOService, HostLink
+from repro.core.vm.routing import build_router
 from repro.core.vm.interp import Interpreter
 from repro.core.vm.oracle import Oracle
-from repro.core.vm.executor import Executor, JitExecutor, OracleExecutor, make_executor
+from repro.core.vm.executor import (
+    BatchedSliceExecutor,
+    Executor,
+    JitExecutor,
+    OracleExecutor,
+    make_executor,
+)
 from repro.core.vm.machine import REXAVM, RunResult
 from repro.core.vm.fleet import FleetKernels, FleetResult, FleetVM, get_fleet_kernels, reference_round
 from repro.core.vm.ensemble import EnsembleVM, replicate_state
@@ -21,9 +28,9 @@ __all__ = [
     "ISA", "WORDS", "Word", "PerfectHashTable", "LinearSearchTable", "get_isa",
     "Compiler", "CompileError", "tokenize",
     "CodeFrame", "FrameManager", "Dictionary",
-    "FiosRegistry", "DiosRegistry", "HostLink",
+    "FiosRegistry", "DiosRegistry", "FleetIOService", "HostLink", "build_router",
     "Interpreter", "Oracle", "REXAVM", "RunResult",
-    "Executor", "JitExecutor", "OracleExecutor", "make_executor",
+    "Executor", "BatchedSliceExecutor", "JitExecutor", "OracleExecutor", "make_executor",
     "FleetKernels", "FleetResult", "FleetVM", "get_fleet_kernels", "reference_round",
     "EnsembleVM", "replicate_state", "vmstate",
 ]

@@ -59,13 +59,49 @@ class JitExecutor:
         self.interp = interp_for(cfg, isa)
         self.h2d = 0               # host -> device full-state transfers
         self.d2h = 0               # device -> host full-state transfers
+        self.h2d_bytes = 0         # bytes moved host -> device
+        self.d2h_bytes = 0         # bytes moved device -> host
 
     def run_slice(self, state: VMState, steps: int) -> VMState:
+        nbytes = vms.state_nbytes(state)
         dev = vms.to_device(state)
         self.h2d += 1
+        self.h2d_bytes += nbytes
         dev, _ = self.interp.run_slice(dev, steps)
         out = vms.to_numpy(dev)
         self.d2h += 1
+        self.d2h_bytes += nbytes
+        return out
+
+
+class BatchedSliceExecutor:
+    """Vmapped ``run_slice`` over a leading node axis — the fleet's layer 1.
+
+    Device state in, device state out: unlike :class:`JitExecutor` there is
+    no host<->device boundary here; the stacked ``VMState`` stays resident
+    (and, under a node-sharded ``NamedSharding``, stays *partitioned* — the
+    per-node slice is embarrassingly parallel, so XLA runs each shard's
+    nodes without any cross-device traffic).  Shared by ``FleetKernels``
+    (sensor networks) and ``EnsembleVM`` (lock-stepped replicas)."""
+
+    backend = "batched"
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+        import jax
+
+        self.cfg = cfg
+        from repro.core.vm.interp import interp_for
+        self.interp = interp_for(cfg, isa)
+        single = self.interp.run_slice_fn
+
+        def batched(S: VMState, steps: int):
+            return jax.vmap(lambda s: single(s, steps))(S)
+
+        # (state, steps) -> (state, found-per-node); steps is static.
+        self.run_slice_batched = jax.jit(batched, static_argnames=("steps",))
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        out, _ = self.run_slice_batched(state, steps)
         return out
 
 
@@ -80,6 +116,8 @@ class OracleExecutor:
         self.oracle = Oracle(cfg, isa)
         self.h2d = 0
         self.d2h = 0
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
 
     def run_slice(self, state: VMState, steps: int) -> VMState:
         state, _ = self.oracle.run_slice(state, steps)

@@ -7,19 +7,26 @@ host<->device every micro-slice; this module turns that into a fleet:
 
   * ``FleetVM`` holds N heterogeneous node states as ONE stacked
     :class:`~repro.core.vm.vmstate.VMState` with a leading node axis.  The
-    stack lives on the device; whole rounds (vmapped ``run_slice`` + message
-    routing + clock) run jitted, and the full state only syncs to the host
-    when a node actually suspends on host IO (FIOS / stream words).
-  * ``send``/``receive`` are routed **on device** through per-node mailbox
-    rings (``VMState.mbox``/``mbox_rd``/``mbox_wr``): a 64-node sensor
-    network runs whole message rounds without touching the host.  A full
-    destination mailbox applies backpressure (the sender stays suspended and
-    retries next round); an out-of-range destination drops the message.
+    stack lives on the device — and, given a mesh, is *partitioned* across
+    it: a ``NamedSharding`` over the ``"node"`` mesh axis (wired through
+    ``sharding.rules.make_fleet_rules`` + ``sharding.api.logical_leading``)
+    splits the fleet so thousand-node networks span devices.  Whole rounds
+    run jitted; host IO is serviced by gathering only the suspended nodes'
+    slices (:class:`~repro.core.vm.ios.FleetIOService`).
+  * The round is three layers:  (1) the vmapped per-node slice
+    (:class:`~repro.core.vm.executor.BatchedSliceExecutor` — embarrassingly
+    parallel, zero cross-shard traffic);  (2) on-device ``send``/``receive``
+    routing through per-node mailbox rings
+    (:mod:`repro.core.vm.routing` — under sharding, the mailbox exchange is
+    a node-axis collective gather/scatter);  (3) the virtual clock advance +
+    time warp (elementwise per node).  A full destination mailbox applies
+    backpressure (the sender stays suspended and retries next round); an
+    out-of-range destination drops the message.
   * ``reference_round`` is the operational specification: the same round
     semantics over N *independent* ``REXAVM`` instances exchanging messages
     via the host.  tests/test_vm_fleet.py asserts byte-exact state equality
-    between the two — the fleet-level restatement of the paper's
-    software/hardware equivalence claim.
+    between the two — sharded or not — the fleet-level restatement of the
+    paper's software/hardware equivalence claim.
 
 Round semantics (mirrors ``REXAVM.run``, applied per node, lockstep):
 
@@ -56,6 +63,7 @@ from repro.core.vm.spec import (
     ST_YIELD,
     get_isa,
 )
+from repro.core.vm import vmstate as vms
 from repro.core.vm.vmstate import VMState
 
 I32 = jnp.int32
@@ -67,123 +75,62 @@ _I32_MAX = np.iinfo(np.int32).max
 # ---------------------------------------------------------------------------
 
 class FleetKernels:
-    """Batched slice + routing + clock for one (VMConfig, ISA) pair.
+    """Batched slice + routing + clock for one (VMConfig, ISA, mesh) triple.
 
-    ``batched_slice``  — vmapped ``run_slice`` over the node axis (also the
-                         ensemble's lockstep executor);
+    The round is composed from the three refactored layers:
+
+    ``executor``       — :class:`BatchedSliceExecutor`: vmapped ``run_slice``
+                         over the node axis (also the ensemble's lockstep
+                         executor; ``batched_slice`` is its jitted form);
+    ``route``          — :func:`repro.core.vm.routing.build_router`: the
+                         on-device mailbox collective;
     ``round``          — one full fleet round (slice, clock, routing, warp),
                          pure JAX, state in / state out, device resident.
+
+    With a mesh, every layer boundary re-asserts the node-axis partition via
+    the logical-rules layer, so XLA keeps per-node work shard-local and only
+    the mailbox exchange crosses shards.
     """
 
-    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None, mesh=None):
         self.cfg = cfg
         self.isa = isa or get_isa()
-        from repro.core.vm.interp import interp_for
-        self.interp = interp_for(cfg, isa)
+        self.mesh = mesh
+        from repro.core.vm.executor import BatchedSliceExecutor
+        self.executor = BatchedSliceExecutor(cfg, isa)
+        self.interp = self.executor.interp
         self._build()
 
     def _build(self):
         cfg = self.cfg
-        T = cfg.max_tasks
-        DS = cfg.ds_size
-        MB = cfg.mbox_size
-        OP_SEND = self.isa.opcode["send"]
-        OP_RECV = self.isa.opcode["receive"]
-        single_slice = self.interp.run_slice_fn
+        from repro.core.vm.routing import build_router
 
-        def batched_slice(S: VMState, steps: int):
-            return jax.vmap(lambda s: single_slice(s, steps))(S)
+        batched_slice = self.executor.run_slice_batched
+        self.batched_slice = batched_slice
+        route = build_router(cfg, self.isa)
+        self.route = route
 
-        self.batched_slice = jax.jit(batched_slice, static_argnames=("steps",))
+        if self.mesh is not None:
+            from repro.sharding.api import logical_leading, logical_rules
+            from repro.sharding.rules import make_fleet_rules
+            rules = make_fleet_rules(self.mesh, self.mesh.axis_names[0])
 
-        # -- on-device inter-node message routing ---------------------------
-
-        def route(S: VMState):
-            """All sends in (node, task) order, then all receives.
-
-            Returns (state, progress) where ``progress[i]`` is True when any
-            of node i's tasks was resumed this round (the per-node analogue
-            of ``REXAVM._service_io``'s return value).
-            """
-            N = S.pc.shape[0]
-
-            def send_body(k, carry):
-                S, progress = carry
-                i, t = k // T, k % T
-                is_send = (S.tstatus[i, t] == ST_IOWAIT) & (
-                    S.io_op[i, t] == OP_SEND
-                )
-                dsp = S.dsp[i, t]
-                # send ( v dst -- ): dst on top, both still on DS (pc rewound).
-                dst = S.ds[i, t, jnp.maximum(dsp - 1, 0)]
-                v = S.ds[i, t, jnp.maximum(dsp - 2, 0)]
-                dst_ok = (dst >= 0) & (dst < N)
-                dstc = jnp.clip(dst, 0, N - 1)
-                space = (S.mbox_wr[dstc] - S.mbox_rd[dstc]) < MB
-                deliver = is_send & dst_ok & space
-                # Full mailbox => backpressure (sender retries next round);
-                # invalid destination => message dropped, sender resumes.
-                resume = is_send & ((~dst_ok) | space)
-                slot = S.mbox_wr[dstc] % MB
-                row = jnp.where(deliver, dstc, N)       # N = dropped scatter
-                mbox = S.mbox.at[row, 2 * slot].set(I32(i), mode="drop")
-                mbox = mbox.at[row, 2 * slot + 1].set(v, mode="drop")
-                ri = jnp.where(resume, i, N)
-                S = S._replace(
-                    mbox=mbox,
-                    mbox_wr=S.mbox_wr.at[row].add(1, mode="drop"),
-                    dsp=S.dsp.at[ri, t].add(-2, mode="drop"),
-                    pc=S.pc.at[ri, t].add(1, mode="drop"),
-                    io_op=S.io_op.at[ri, t].set(0, mode="drop"),
-                    tstatus=S.tstatus.at[ri, t].set(ST_YIELD, mode="drop"),
-                )
-                progress = progress.at[ri].set(True, mode="drop")
-                return S, progress
-
-            def recv_body(k, carry):
-                S, progress = carry
-                i, t = k // T, k % T
-                is_recv = (S.tstatus[i, t] == ST_IOWAIT) & (
-                    S.io_op[i, t] == OP_RECV
-                )
-                avail = S.mbox_wr[i] > S.mbox_rd[i]
-                deliver = is_recv & avail
-                slot = S.mbox_rd[i] % MB
-                src = S.mbox[i, 2 * slot]
-                v = S.mbox[i, 2 * slot + 1]
-                ri = jnp.where(deliver, i, N)
-                dsp = S.dsp[i, t]
-                # receive ( -- src v ): push src, then the value.
-                ds = S.ds.at[ri, t, jnp.clip(dsp, 0, DS - 1)].set(
-                    src, mode="drop"
-                )
-                ds = ds.at[ri, t, jnp.clip(dsp + 1, 0, DS - 1)].set(
-                    v, mode="drop"
-                )
-                S = S._replace(
-                    ds=ds,
-                    dsp=S.dsp.at[ri, t].add(2, mode="drop"),
-                    mbox_rd=S.mbox_rd.at[ri].add(1, mode="drop"),
-                    pc=S.pc.at[ri, t].add(1, mode="drop"),
-                    io_op=S.io_op.at[ri, t].set(0, mode="drop"),
-                    tstatus=S.tstatus.at[ri, t].set(ST_YIELD, mode="drop"),
-                )
-                progress = progress.at[ri].set(True, mode="drop")
-                return S, progress
-
-            progress = jnp.zeros((N,), bool)
-            S, progress = jax.lax.fori_loop(0, N * T, send_body, (S, progress))
-            S, progress = jax.lax.fori_loop(0, N * T, recv_body, (S, progress))
-            return S, progress
+            def constrain(S: VMState) -> VMState:
+                with logical_rules(rules):
+                    return logical_leading(S, "node")
+        else:
+            def constrain(S: VMState) -> VMState:
+                return S
 
         def fleet_round(S: VMState, steps: int):
+            S = constrain(S)
             steps0 = S.steps
             S, _ = batched_slice(S, steps)
             # Virtual clock from the calibrated per-instruction time
             # (REXAVM.run step 2, per node).
             inc = jnp.maximum(1, (S.steps - steps0) * cfg.us_per_instr // 1000)
             S = S._replace(now=S.now + inc)
-            S, progress = route(S)
+            S, progress = route(constrain(S))
             # Virtual-time warp to the earliest wake-up (REXAVM.run step 4).
             runnable = (S.tstatus == ST_YIELD).any(axis=1)
             iowait = (S.tstatus == ST_IOWAIT).any(axis=1)
@@ -198,15 +145,21 @@ class FleetKernels:
                 & waiting.any(axis=1)
                 & (wake > S.now)
             )
-            return S._replace(now=jnp.where(warp, wake, S.now))
+            return constrain(S._replace(now=jnp.where(warp, wake, S.now)))
 
         self.round = jax.jit(fleet_round, static_argnames=("steps",))
 
 
 @functools.lru_cache(maxsize=8)
-def get_fleet_kernels(cfg: VMConfig) -> FleetKernels:
-    """Fleet kernels are expensive to trace — share per VMConfig."""
-    return FleetKernels(cfg)
+def _get_fleet_kernels(cfg: VMConfig, mesh) -> FleetKernels:
+    return FleetKernels(cfg, mesh=mesh)
+
+
+def get_fleet_kernels(cfg: VMConfig, mesh=None) -> FleetKernels:
+    """Fleet kernels are expensive to trace — share per (VMConfig, mesh).
+    Normalizes the optional mesh so ``f(cfg)`` and ``f(cfg, None)`` hit the
+    same cache entry (EnsembleVM and FleetVM must share kernels)."""
+    return _get_fleet_kernels(cfg, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +186,7 @@ class FleetVM:
 
     Usage::
 
-        fleet = FleetVM(cfg, n=64)
+        fleet = FleetVM(cfg, n=64, mesh=make_node_mesh())
         for i, node in enumerate(fleet.nodes):   # nodes are real REXAVMs
             node.launch(node.load(program_for(i)))
         res = fleet.run(max_rounds=200)
@@ -241,11 +194,18 @@ class FleetVM:
 
     Nodes are programmed through their ordinary host frontends (``load``,
     ``launch``, ``dios_add``, ``fios_add``); ``run`` stacks the states onto
-    the device and keeps them there across rounds.  ``send dst`` addresses
-    node ``dst`` by fleet index; messages route on device (see module doc).
-    Host IO (FIOS calls, ``out``/``in``) is detected by a cheap per-round
-    status probe and serviced through a full sync only when pending —
-    ``h2d``/``d2h`` count those full-state transfers.
+    the device(s) and keeps them there across rounds.  With ``mesh`` the
+    leading node axis is partitioned via ``NamedSharding`` over the mesh's
+    node axis (replicated fallback when ``n`` is not divisible).  ``send
+    dst`` addresses node ``dst`` by fleet index; messages route on device
+    (see module doc).  Host IO (FIOS calls, ``out``/``in``) is detected by a
+    cheap per-round status probe and serviced by the partial-state
+    :class:`~repro.core.vm.ios.FleetIOService` (``io_mode="partial"``,
+    the default) which moves only the suspended nodes' slices, or by PR 1's
+    full sync+push (``io_mode="full"``, kept for byte-count comparison).
+    ``h2d``/``d2h`` count full-state syncs; ``h2d_bytes``/``d2h_bytes``
+    count all bytes moved either way; ``io_h2d_bytes``/``io_d2h_bytes``
+    count just the IO-service share.
     """
 
     def __init__(
@@ -255,6 +215,8 @@ class FleetVM:
         lookup: str = "pht",
         seed: int = 1,
         nodes: list[REXAVM] | None = None,
+        mesh=None,
+        io_mode: str = "partial",
     ):
         if nodes is not None:
             assert len(nodes) >= 1
@@ -269,39 +231,89 @@ class FleetVM:
                 REXAVM(self.cfg, backend="jit", lookup=lookup, seed=seed + i)
                 for i in range(n)
             ]
+        if io_mode not in ("partial", "full"):
+            raise ValueError(f"unknown io_mode {io_mode!r}")
+        self.io_mode = io_mode
         self.n = len(self.nodes)
+        self.mesh = mesh
+        self._sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            ndev = int(np.prod(mesh.devices.shape))
+            # Non-divisible fleets replicate (same rule as logical()).
+            spec = (
+                PartitionSpec(mesh.axis_names[0])
+                if self.n % ndev == 0
+                else PartitionSpec()
+            )
+            self._sharding = NamedSharding(mesh, spec)
         isa = self.nodes[0].isa
         if any(vm.isa is not isa for vm in self.nodes):
             raise ValueError("fleet nodes must share one ISA")
         # The cached kernels are built for the default ISA; a custom-ISA
         # fleet needs its own build (opcode numbering differs).
         if isa is get_isa():
-            self.kernels = get_fleet_kernels(self.cfg)
+            self.kernels = get_fleet_kernels(self.cfg, mesh)
         else:
-            self.kernels = FleetKernels(self.cfg, isa)
+            self.kernels = FleetKernels(self.cfg, isa, mesh)
         self._op_send = isa.opcode["send"]
         self._op_recv = isa.opcode["receive"]
         self._S: VMState | None = None     # device-resident stacked state
+        from repro.core.vm.ios import FleetIOService
+        self.io_service = FleetIOService(self.nodes)
         self.h2d = 0                       # full-state host -> device syncs
         self.d2h = 0                       # full-state device -> host syncs
+        self.h2d_bytes = 0                 # all bytes host -> device
+        self.d2h_bytes = 0                 # all bytes device -> host
         self.probes = 0                    # small status probes (tstatus/io_op)
 
     @classmethod
-    def from_nodes(cls, nodes: list[REXAVM]) -> "FleetVM":
+    def from_nodes(cls, nodes: list[REXAVM], **kw) -> "FleetVM":
         """Stack pre-configured REXAVM nodes into one fleet."""
-        return cls(nodes=nodes)
+        return cls(nodes=nodes, **kw)
+
+    # -- transfer accounting ---------------------------------------------------
+
+    @property
+    def io_h2d_bytes(self) -> int:
+        """IO-service bytes host -> device (partial mode only)."""
+        return self.io_service.h2d_bytes
+
+    @property
+    def io_d2h_bytes(self) -> int:
+        """IO-service bytes device -> host (partial mode only)."""
+        return self.io_service.d2h_bytes
+
+    def transfer_stats(self) -> dict:
+        """All movement counters in one dict (serve monitor / benchmarks)."""
+        return {
+            "h2d": self.h2d,
+            "d2h": self.d2h,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+            "io_services": self.io_service.services,
+            "io_nodes_serviced": self.io_service.nodes_serviced,
+            "io_h2d_bytes": self.io_service.h2d_bytes,
+            "io_d2h_bytes": self.io_service.d2h_bytes,
+            "probes": self.probes,
+        }
 
     # -- state movement --------------------------------------------------------
 
     def start(self) -> None:
-        """Stack per-node host states into the device-resident fleet state."""
-        self._S = VMState(
-            *[
-                jnp.stack([jnp.asarray(getattr(vm.state, f)) for vm in self.nodes])
-                for f in VMState._fields
-            ]
-        )
+        """Stack per-node host states into the device-resident fleet state
+        (sharded over the node mesh axis when a mesh was given)."""
+        from repro.core.vm.vmstate import stack_states
+
+        stacked = stack_states([vm.state for vm in self.nodes])
+        if self._sharding is not None:
+            self._S = VMState(
+                *[jax.device_put(x, self._sharding) for x in stacked]
+            )
+        else:
+            self._S = VMState(*[jnp.asarray(x) for x in stacked])
         self.h2d += 1
+        self.h2d_bytes += vms.state_nbytes(stacked)
 
     def sync(self) -> None:
         """Pull the stacked state back into the per-node host frontends."""
@@ -311,6 +323,7 @@ class FleetVM:
             # np.array keeps 0-d fields as mutable 0-d arrays, not scalars.
             vm.state = VMState(*[np.array(f[i]) for f in host])
         self.d2h += 1
+        self.d2h_bytes += vms.state_nbytes(self._S)
 
     def push(self) -> None:
         """Re-stack (possibly host-mutated) node states onto the device."""
@@ -325,8 +338,23 @@ class FleetVM:
         # on their own device round trip.
         return jax.device_get((self._S.tstatus, self._S.io_op, self._S.steps))
 
-    def _service_host_io(self) -> bool:
-        """Full sync + host service of FIOS/stream suspensions, then push."""
+    def _service_host_io(self, node_mask: np.ndarray) -> bool:
+        """Service host-IO suspensions of the masked nodes.
+
+        ``partial`` gathers/scatters only those nodes' slices through
+        :class:`FleetIOService`; ``full`` is PR 1's whole-state sync + push.
+        """
+        if self.io_mode == "partial":
+            svc = self.io_service
+            d2h0, h2d0 = svc.d2h_bytes, svc.h2d_bytes
+            self._S, progress = svc.service(
+                self._S, np.flatnonzero(node_mask)
+            )
+            # The headline byte counters include the IO-service share, so
+            # partial vs full mode compare like for like.
+            self.d2h_bytes += svc.d2h_bytes - d2h0
+            self.h2d_bytes += svc.h2d_bytes - h2d0
+            return progress
         self.sync()
         progress = False
         for vm in self.nodes:
@@ -367,7 +395,7 @@ class FleetVM:
             )
             serviced = False
             if host_io.any():
-                serviced = self._service_host_io()
+                serviced = self._service_host_io(host_io.any(axis=1))
             # A node is finished only when task 0 is terminal AND no other
             # task is runnable, waiting, or IO-suspended (REXAVM.run's
             # "done" condition) — background workers keep the fleet alive.

@@ -108,6 +108,37 @@ def to_device(st: VMState) -> VMState:
     return VMState(*[jnp.asarray(x) for x in st])
 
 
+def state_nbytes(st: VMState) -> int:
+    """Total byte size of one state (or one stacked fleet state)."""
+    return sum(int(x.nbytes) for x in st)
+
+
+def stack_states(states: list[VMState]) -> VMState:
+    """Stack per-node states along a new leading node axis (host side)."""
+    return VMState(
+        *[
+            np.stack([np.asarray(getattr(s, f)) for s in states])
+            for f in VMState._fields
+        ]
+    )
+
+
+def take_nodes(S: VMState, idx) -> VMState:
+    """Gather node slices ``idx`` from a stacked fleet state (device op:
+    under a node-sharded state this lowers to a cross-shard gather)."""
+    idx = jnp.asarray(idx)
+    return VMState(*[x[idx] for x in S])
+
+
+def put_nodes(S: VMState, idx, sub: VMState) -> VMState:
+    """Scatter node slices ``sub`` back into a stacked fleet state at rows
+    ``idx`` (the partial-IO write-back collective)."""
+    idx = jnp.asarray(idx)
+    return VMState(
+        *[x.at[idx].set(jnp.asarray(u)) for x, u in zip(S, sub)]
+    )
+
+
 def launch_task(st: VMState, task: int, entry: int, prio: int = 0, deadline: int = 0) -> VMState:
     """Host-side: point task slot ``task`` at ``entry`` and mark it ready."""
     st = to_numpy(st)

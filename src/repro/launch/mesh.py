@@ -23,3 +23,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(cfg: MeshConfig):
     """Generic mesh from a MeshConfig (small meshes for tests)."""
     return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_node_mesh(n_devices: int | None = None):
+    """1-D mesh over the ``"node"`` axis for the VM fleet runtime.
+
+    The fleet shards the leading node axis of its stacked ``VMState`` over
+    this mesh (``sharding.rules.make_fleet_rules``); thousand-node sensor
+    networks then span every local device.  Defaults to all devices — on a
+    forced-host-device CPU (``--xla_force_host_platform_device_count=8``)
+    that is an 8-way node axis."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("node",))

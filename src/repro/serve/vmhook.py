@@ -56,10 +56,14 @@ class FleetServeMonitor:
         job: str = DEFAULT_JOB,
         cfg: VMConfig | None = None,
         rounds_per_step: int = 8,
+        mesh=None,
     ):
         self.cfg = cfg or VMConfig()
         self.rounds_per_step = rounds_per_step
-        self.fleet = FleetVM(self.cfg, n=n)
+        # ``mesh`` shards the monitor fleet's node axis like any other
+        # fleet; the DIOS publish + partial IO service then move only the
+        # reporting nodes' slices.
+        self.fleet = FleetVM(self.cfg, n=n, mesh=mesh)
         self._frames = []
         for node in self.fleet.nodes:
             node.dios_add("stats", np.zeros(self.STATS_CELLS, np.int32))
@@ -79,3 +83,9 @@ class FleetServeMonitor:
     def reports(self) -> list[list[int]]:
         """Per-node values reported via ``out`` so far."""
         return [list(node.out_stream) for node in self.fleet.nodes]
+
+    def transfer_stats(self) -> dict:
+        """The monitor's own measurement overhead: fleet transfer counters
+        (full syncs, partial IO-service bytes, probes) — reportable next to
+        the serving stats it measures."""
+        return self.fleet.transfer_stats()

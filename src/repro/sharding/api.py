@@ -63,6 +63,18 @@ def logical_rules(rules: Optional[LogicalRules]):
         _local.rules = prev
 
 
+def logical_leading(tree, name: str):
+    """Constrain only the *leading* axis of every leaf in a pytree.
+
+    Used by the fleet runtime: a stacked ``VMState`` has the node axis
+    leading on every field (down to per-node scalars stacked to ``(N,)``),
+    so one logical name partitions the whole machine stack.  Like
+    :func:`logical`, a no-op outside any ``logical_rules`` context."""
+    return jax.tree.map(
+        lambda x: logical(x, name, *([None] * (x.ndim - 1))), tree
+    )
+
+
 def logical(x: jax.Array, *names) -> jax.Array:
     """Apply a sharding constraint from logical axis names (no-op when no
     rules are active).  Axes whose dim is not divisible by the mesh axis

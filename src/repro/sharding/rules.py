@@ -75,6 +75,19 @@ def make_rules(
 DEFAULT_RULES = make_rules  # alias documented in DESIGN.md
 
 
+def make_fleet_rules(mesh: Mesh, node_axis: str = "node") -> LogicalRules:
+    """Rules for the VM fleet runtime: the logical ``"node"`` axis (the
+    leading axis of a stacked ``VMState``) binds to the mesh's node axis;
+    everything else stays node-local.  ``logical()``'s divisibility check
+    makes a non-divisible fleet fall back to replication, so the same
+    kernels serve 1-device tests and mesh-sharded networks."""
+    if node_axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no {node_axis!r} axis"
+        )
+    return LogicalRules(mesh=mesh, mapping={"node": node_axis})
+
+
 # ---------------------------------------------------------------------------
 # Parameter partition specs (name-based)
 # ---------------------------------------------------------------------------

@@ -120,6 +120,34 @@ class TestFleetEquivalence:
         assert fleet.nodes[1].output() == out
 
 
+class TestRandomizedPrograms:
+    def test_random_send_receive_programs_match_reference(self):
+        """Seeded-random messaging programs (wraparound, backpressure,
+        out-of-range drops, blocked receives) stay byte-exact vs the
+        host-routed reference.  Mirrors the hypothesis property tests in
+        test_vm_fleet_props.py for environments without hypothesis."""
+        n = 3
+        rng = np.random.default_rng(7)
+        for _ in range(4):
+            progs = []
+            for _i in range(n):
+                units = []
+                for _u in range(int(rng.integers(2, 7))):
+                    kind = int(rng.integers(0, 3))
+                    if kind == 0:
+                        v = int(rng.integers(0, 100))
+                        dst = int(rng.integers(-1, n + 2))  # incl. bad dsts
+                        units.append(f"{v} {dst} send")
+                    elif kind == 1:
+                        units.append("receive drop drop")
+                    else:
+                        units.append(f"{int(rng.integers(0, 50))} .")
+                progs.append(" ".join(units) + " halt")
+            fleet, ref = make_fleet(progs), make_reference(progs)
+            run_lockstep(fleet, ref, rounds=12)
+            assert_states_equal(fleet, ref)
+
+
 class TestFleet64Nodes:
     def test_64_node_ring_on_device(self):
         """Acceptance: a 64-node sensor-network-style program with on-device
@@ -175,8 +203,53 @@ class TestFleetHostIO:
         assert res.statuses == ["halt"] * n
         # argmax of 0,2,4,... is index 7 for every node (host stream `out`).
         assert [vm.out_stream for vm in fleet.nodes] == [[7]] * n
-        # Host IO forced at least one full sync beyond start/final.
-        assert fleet.h2d >= 2 and fleet.d2h >= 2
+        # Host IO went through the partial-state service, not full syncs:
+        # the only full transfers are start + the final sync.
+        assert fleet.h2d == 1 and fleet.d2h == 1
+        assert fleet.io_service.services >= 1
+        assert fleet.io_d2h_bytes > 0 and fleet.io_h2d_bytes > 0
+
+    def test_partial_io_moves_fewer_bytes_than_full_sync(self):
+        """Acceptance: when only a strict subset of nodes suspends on host
+        IO, the partial-state IO service must move strictly fewer bytes than
+        PR 1's full-state sync on the same workload — proportionally to the
+        suspended fraction."""
+        n, n_sus = 6, 2
+
+        def build(io_mode):
+            fleet = FleetVM(CFG, n=n, io_mode=io_mode)
+            for i, node in enumerate(fleet.nodes):
+                if i < n_sus:
+                    node.dios_add("ready", np.array([0], np.int32))
+                    node.fios_add(
+                        "ping", lambda node=node: node.dios_write("ready", [1])
+                    )
+                    node.launch(node.load(
+                        "ping 1000 1 ready await drop 5 . halt"
+                    ))
+                else:
+                    node.launch(node.load("0 50 0 do 1+ loop . halt"))
+            return fleet
+
+        partial = build("partial")
+        rp = partial.run(max_rounds=60)
+        full = build("full")
+        rf = full.run(max_rounds=60)
+        assert rp.statuses == rf.statuses == ["halt"] * n
+        assert rp.outputs == rf.outputs
+        # Full mode serviced IO through whole-fleet syncs; partial mode
+        # moved only the suspended slices.
+        part_io_bytes = partial.io_d2h_bytes + partial.io_h2d_bytes
+        assert part_io_bytes > 0
+        assert full.d2h >= 2 and partial.d2h == 1
+        # Strictly fewer bytes overall, and per-service proportional to the
+        # suspended fraction (every VMState field carries the node axis, so
+        # a 2-of-6 gather is exactly 2/6 of a full sync).
+        assert (partial.d2h_bytes + partial.h2d_bytes
+                < full.d2h_bytes + full.h2d_bytes)
+        per_node = vms.state_nbytes(full.nodes[0].state)
+        per_service = part_io_bytes // (2 * partial.io_service.services)
+        assert per_service == n_sus * per_node
 
     def test_run_waits_for_background_workers(self):
         """run() must not stop while spawned tasks are still live, even when

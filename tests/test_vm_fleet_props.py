@@ -1,0 +1,111 @@
+"""Property-based fleet routing tests (hypothesis; skipped when absent).
+
+Randomized send/receive programs — mailbox-ring wraparound, backpressure
+floods, out-of-range drops, blocked receives — must stay byte-exact against
+``reference_round``, the host-routed operational specification.  These are
+the adversarial generalization of tests/test_vm_fleet.py's hand-written
+cases; a seeded numpy mirror lives there for environments without
+hypothesis.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.config import VMConfig
+from repro.core.vm import FleetVM, REXAVM, reference_round
+from repro.core.vm.vmstate import VMState
+
+# Same config as test_vm_fleet.py so the traced kernels are shared; a tiny
+# mailbox (4 entries) makes wraparound and backpressure the common case.
+CFG = VMConfig(cs_size=2048, steps_per_slice=64, mbox_size=4)
+N = 3          # one node count -> one traced round kernel for the whole file
+
+
+def _unit(n: int):
+    """One program unit: a send (possibly out-of-range), a receive, or
+    local compute."""
+    send = st.tuples(
+        st.integers(0, 99), st.integers(-2, n + 2)
+    ).map(lambda t: f"{t[0]} {t[1]} send")
+    recv = st.just("receive drop drop")
+    compute = st.integers(0, 50).map(lambda v: f"{v} .")
+    return st.one_of(send, recv, compute)
+
+
+def _program(n: int):
+    return st.lists(_unit(n), min_size=1, max_size=8).map(
+        lambda units: " ".join(units) + " halt"
+    )
+
+
+def _lockstep(progs: list[str], rounds: int):
+    fleet = FleetVM(CFG, n=len(progs))
+    for node, prog in zip(fleet.nodes, progs):
+        node.launch(node.load(prog))
+    ref = [REXAVM(CFG, backend="jit", seed=1 + i) for i in range(len(progs))]
+    for node, prog in zip(ref, progs):
+        node.launch(node.load(prog))
+    fleet.start()
+    for _ in range(rounds):
+        fleet._S = fleet.kernels.round(fleet._S, CFG.steps_per_slice)
+    fleet.sync()
+    for _ in range(rounds):
+        reference_round(ref, CFG.steps_per_slice)
+    return fleet, ref
+
+
+def _assert_equal(fleet: FleetVM, ref: list[REXAVM]):
+    for i, (a, b) in enumerate(zip(fleet.nodes, ref)):
+        for f in VMState._fields:
+            av = np.asarray(getattr(a.state, f))
+            bv = np.asarray(getattr(b.state, f))
+            assert np.array_equal(av, bv), f"node {i} field {f}"
+
+
+@settings(max_examples=12, deadline=None)
+@given(progs=st.lists(_program(N), min_size=N, max_size=N))
+def test_random_programs_byte_exact(progs):
+    """Any mix of sends/receives/compute: device routing == host routing."""
+    fleet, ref = _lockstep(progs, rounds=10)
+    _assert_equal(fleet, ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_msgs=st.integers(CFG.mbox_size + 1, 3 * CFG.mbox_size),
+    target=st.integers(0, N - 1),
+)
+def test_flood_backpressure_and_wraparound(n_msgs, target):
+    """A sender floods one node with more messages than the ring holds:
+    backpressure stalls it, the monotonic counters wrap the ring slots, and
+    no message is lost or reordered — exactly as the reference."""
+    progs = []
+    for i in range(N):
+        if i == (target + 1) % N:
+            progs.append(
+                ": spray 0 "
+                + f"{n_msgs} 0 do dup {target} send 1+ loop ; spray drop halt"
+            )
+        elif i == target:
+            progs.append(f"{n_msgs} 0 do receive . drop loop halt")
+        else:
+            progs.append("0 20 0 do 1+ loop . halt")
+    fleet, ref = _lockstep(progs, rounds=4 * n_msgs)
+    _assert_equal(fleet, ref)
+    out = ref[target].output()
+    assert out == "".join(f"{k} " for k in range(n_msgs))
+
+
+@settings(max_examples=8, deadline=None)
+@given(dst=st.one_of(st.integers(-5, -1), st.integers(N, N + 5)))
+def test_out_of_range_always_drops(dst):
+    """Every out-of-range destination drops the message but resumes the
+    sender, on device and host alike."""
+    progs = [f"7 {dst} send 1 . halt"] + ["0 10 0 do 1+ loop . halt"] * (N - 1)
+    fleet, ref = _lockstep(progs, rounds=6)
+    _assert_equal(fleet, ref)
+    assert fleet.nodes[0].output() == ref[0].output()
