@@ -1,8 +1,10 @@
 """Paper Tab. 9 — VM interpreter throughput (MWPS) and compiler throughput
 (MCPS), for the oracle ("software") and jitted ("hardware") backends, the
-vmapped Parallel-VM ensemble (paper §3.4), and the device-resident fleet
+vmapped Parallel-VM ensemble (paper §3.4), the device-resident fleet
 runtime (steps/s and host<->device transfer counts vs. the seed's
-per-slice host loop)."""
+per-slice host loop), and the Pallas vmloop-kernel fleet
+(``vm_fleet64_pallas``: steps/s + in-kernel vs lax-tail step split +
+bail-out counts)."""
 
 from __future__ import annotations
 
@@ -142,6 +144,48 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int, int, int]:
             fleet_xfer, host_xfer, fleet_bytes, host_bytes)
 
 
+def bench_fleet_pallas(n: int = 64, lax_steps_per_s: float | None = None):
+    """The same n-node ring as :func:`bench_fleet`, executed by the Pallas
+    vmloop kernel (``FleetVM(executor="pallas")``): the fetch/dispatch/stack
+    loop runs on chip, bailing to the lax tail on the ``send``/``receive``
+    suspensions.  Records steps/s plus the kernel/bail split so
+    ``BENCH_vm.json`` tracks how much of the workload the kernel owns.  On
+    this CPU container the kernel runs through the Pallas interpreter —
+    the row tracks the trajectory, not a TPU speedup."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+
+    def prog(i: int) -> str:
+        if i == 0:
+            return f"1 {1 % n} send receive swap drop . halt"
+        return f"receive swap drop 1+ {(i + 1) % n} send halt"
+
+    def build() -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas")
+        for i, node in enumerate(fleet.nodes):
+            node.launch(node.load(prog(i)))
+        return fleet
+
+    warm = build()
+    warm.run(max_rounds=2, steps=cfg.steps_per_slice)
+
+    fleet = build()
+    t0 = time.perf_counter()
+    res = fleet.run(max_rounds=4 * n)
+    dt = time.perf_counter() - t0
+    steps = int(res.steps.sum())
+    stats = fleet.pallas_stats()
+    METRICS["vm_fleet64_pallas"] = {
+        "nodes": n,
+        "steps_per_s": steps / dt,
+        "lax_steps_per_s": lax_steps_per_s,
+        "kernel_steps": stats["kernel_steps"],
+        "fallback_steps": steps - stats["kernel_steps"],
+        "bailed_node_rounds": stats["bailed_node_rounds"],
+        "rounds": res.rounds,
+    }
+    return steps / dt, stats, steps
+
+
 def bench_fleet_io(n: int = 8, n_suspended: int = 2) -> tuple[int, int]:
     """The partial-IO win: ``n_suspended`` of ``n`` nodes block on a FIOS
     call while the rest compute.  Returns IO-service bytes for the
@@ -217,6 +261,13 @@ def run() -> list[tuple[str, float, str]]:
                  f"({f_xfer} full-state transfers / {f_bytes} B) vs "
                  f"{h_sps:.0f} steps/s ({h_xfer} transfers / {h_bytes} B) "
                  f"seed per-slice host loop"))
+    pk_sps, pk_stats, pk_steps = bench_fleet_pallas(64, lax_steps_per_s=f_sps)
+    rows.append(("vm_fleet64_pallas", 1e6 / pk_sps,
+                 f"{pk_sps:.0f} steps/s pallas-vmloop 64-node network "
+                 f"({pk_stats['kernel_steps']} in-kernel steps / "
+                 f"{pk_steps - pk_stats['kernel_steps']} lax-tail steps / "
+                 f"{pk_stats['bailed_node_rounds']} bail-outs) vs "
+                 f"{f_sps:.0f} steps/s lax interpreter fleet"))
     p_bytes, fs_bytes = bench_fleet_io(8, 2)
     rows.append(("vm_fleet_io_partial", float(p_bytes),
                  f"{p_bytes} B partial-state IO service vs {fs_bytes} B "

@@ -17,6 +17,7 @@ from repro.core.vm.executor import (
     Executor,
     JitExecutor,
     OracleExecutor,
+    PallasSliceExecutor,
     make_executor,
 )
 from repro.core.vm.machine import REXAVM, RunResult
@@ -30,7 +31,8 @@ __all__ = [
     "CodeFrame", "FrameManager", "Dictionary",
     "FiosRegistry", "DiosRegistry", "FleetIOService", "HostLink", "build_router",
     "Interpreter", "Oracle", "REXAVM", "RunResult",
-    "Executor", "BatchedSliceExecutor", "JitExecutor", "OracleExecutor", "make_executor",
+    "Executor", "BatchedSliceExecutor", "JitExecutor", "OracleExecutor",
+    "PallasSliceExecutor", "make_executor",
     "FleetKernels", "FleetResult", "FleetVM", "get_fleet_kernels", "reference_round",
     "EnsembleVM", "replicate_state", "vmstate",
 ]

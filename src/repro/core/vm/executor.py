@@ -15,17 +15,27 @@ given:
                               counted (``h2d``/``d2h``) so benchmarks can
                               report the transfer cost the fleet avoids;
   * :class:`OracleExecutor` — the plain-Python reference ("software" role),
-                              mutating the numpy state in place.
+                              mutating the numpy state in place;
+  * :class:`PallasSliceExecutor`
+                            — the on-chip Pallas vmloop kernel
+                              (``repro.kernels.vmloop``) with a lax-
+                              interpreter tail for instructions outside the
+                              kernel's claimed opcode set — the closest
+                              analogue of the paper's FPGA backend.
 
-Both produce byte-identical states (tests/test_vm_equivalence.py).
+All produce byte-identical states (tests/test_vm_equivalence.py,
+tests/test_vm_pallas.py).
 """
 
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+import functools
+from typing import Callable, NamedTuple, Protocol, runtime_checkable
+
+import numpy as np
 
 from repro.config import VMConfig
-from repro.core.vm.spec import ISA
+from repro.core.vm.spec import ISA, ST_RUN, ST_YIELD, get_isa
 from repro.core.vm import vmstate as vms
 from repro.core.vm.vmstate import VMState
 
@@ -105,6 +115,155 @@ class BatchedSliceExecutor:
         return out
 
 
+class _PallasEngine(NamedTuple):
+    """Jitted batched-slice functions shared by every PallasSliceExecutor
+    with the same (cfg, mesh, interpret) — tracing the kernel + the lax
+    fallback is expensive, so they are cached like ``interp_for``."""
+
+    plain: Callable      # (S, steps) -> (S, found)
+    aux: Callable        # (S, steps) -> (S, found, n_exec, bailed)
+
+
+def _build_pallas_engine(
+    cfg: VMConfig, isa: ISA | None, mesh, interpret: bool
+) -> _PallasEngine:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.vm.interp import interp_for
+    from repro.kernels.vmloop.ops import fleet_vmloop
+
+    interp = interp_for(cfg, isa)
+    schedule = interp._schedule
+    step_instr = interp._step_instr
+
+    def vmloop_rest(st: VMState, remaining):
+        """Finish a slice after a kernel bail-out: the lax interpreter's
+        vmloop with a *traced* step bound (``interp._vmloop``'s bound is
+        static).  A no-op for nodes that suspended or exhausted the budget
+        in-kernel (status != RUN / remaining == 0)."""
+        def cond(carry):
+            s, n = carry
+            return (n < remaining) & (s.tstatus[s.cur] == ST_RUN)
+
+        def body(carry):
+            s, n = carry
+            return step_instr(s), n + 1
+
+        st, _ = lax.while_loop(cond, body, (st, jnp.int32(0)))
+        return st
+
+    def preempt(st: VMState):
+        """run_slice's tail: a task that exhausted its slice stays ready."""
+        still = st.tstatus[st.cur] == ST_RUN
+        return lax.cond(
+            still,
+            lambda s: s._replace(tstatus=s.tstatus.at[s.cur].set(ST_YIELD)),
+            lambda s: s,
+            st,
+        )
+
+    def batched_aux(S: VMState, steps: int):
+        # schedule -> on-chip vmloop -> lax tail -> preempt, per node.
+        # Byte-equivalent to vmapping interp.run_slice_fn: the kernel stops
+        # before the first unclaimed opcode, so the lax tail continues from
+        # an identical intermediate state, and nodes the scheduler left
+        # un-woken never satisfy the loops' ST_RUN condition.
+        S, found = jax.vmap(schedule)(S)
+        S, n_exec, bailed = fleet_vmloop(
+            S, steps, cfg, isa, mesh=mesh, interpret=interpret
+        )
+        S = jax.vmap(vmloop_rest)(S, steps - n_exec)
+        S = jax.vmap(preempt)(S)
+        return S, found, n_exec, bailed
+
+    aux = jax.jit(batched_aux, static_argnames=("steps",))
+
+    def batched(S: VMState, steps: int):
+        S, found, _, _ = batched_aux(S, steps)
+        return S, found
+
+    plain = jax.jit(batched, static_argnames=("steps",))
+    return _PallasEngine(plain=plain, aux=aux)
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_pallas_engine(cfg: VMConfig, mesh, interpret: bool) -> _PallasEngine:
+    return _build_pallas_engine(cfg, None, mesh, interpret)
+
+
+def get_pallas_engine(
+    cfg: VMConfig, isa: ISA | None = None, mesh=None, interpret: bool = True
+) -> _PallasEngine:
+    """Engine-selection policy mirroring ``interp_for``: cached for the
+    default ISA, fresh build for a custom one."""
+    if isa is None or isa is get_isa():
+        return _cached_pallas_engine(cfg, mesh, interpret)
+    return _build_pallas_engine(cfg, isa, mesh, interpret)
+
+
+class PallasSliceExecutor:
+    """On-chip Pallas vmloop + lax tail — the fleet's third slice engine.
+
+    Like :class:`BatchedSliceExecutor` it is device state in / device state
+    out over a stacked node axis (``run_slice_batched``), plus an
+    ``run_slice_batched_aux`` variant exposing per-node kernel step counts
+    and bail-out flags for ``FleetVM.pallas_stats()``/benchmarks.  The
+    single-node :class:`Executor` protocol (``run_slice`` over the
+    host-canonical numpy state) is provided for ``REXAVM(backend="pallas")``
+    and the ISA coverage sweep; it counts transfers like ``JitExecutor``.
+
+    ``interpret=None`` auto-selects: compiled on TPU (or when
+    ``repro.kernels.set_kernels("on")`` forces kernels), Pallas interpreter
+    otherwise — the CPU-testable path pinned byte-exact by
+    tests/test_vm_pallas.py.
+    """
+
+    backend = "pallas"
+
+    def __init__(
+        self,
+        cfg: VMConfig,
+        isa: ISA | None = None,
+        mesh=None,
+        interpret: bool | None = None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        from repro.core.vm.interp import interp_for
+        self.interp = interp_for(cfg, isa)
+        if interpret is None:
+            from repro.kernels import use_kernels
+            interpret = not use_kernels()
+        self.interpret = interpret
+        engine = get_pallas_engine(cfg, isa, mesh, interpret)
+        self.run_slice_batched = engine.plain
+        self.run_slice_batched_aux = engine.aux
+        self.h2d = 0
+        self.d2h = 0
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.kernel_steps = 0      # instructions retired inside the kernel
+        self.fallback_steps = 0    # instructions retired by the lax tail
+        self.bailouts = 0          # slices that hit an unclaimed opcode
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        nbytes = vms.state_nbytes(state)
+        stacked = VMState(*[vms.stack1(x) for x in state])
+        self.h2d += 1
+        self.h2d_bytes += nbytes
+        out, _, n_exec, bailed = self.run_slice_batched_aux(stacked, steps)
+        host = VMState(*[np.array(x[0]) for x in out])
+        self.d2h += 1
+        self.d2h_bytes += nbytes
+        kernel_steps = int(np.asarray(n_exec)[0])
+        self.kernel_steps += kernel_steps
+        self.fallback_steps += int(host.steps) - int(state.steps) - kernel_steps
+        self.bailouts += int(np.asarray(bailed)[0])
+        return host
+
+
 class OracleExecutor:
     """Plain-Python reference interpreter (no device, no transfers)."""
 
@@ -129,4 +288,6 @@ def make_executor(backend: str, cfg: VMConfig, isa: ISA | None = None) -> Execut
         return JitExecutor(cfg, isa)
     if backend == "oracle":
         return OracleExecutor(cfg, isa)
+    if backend == "pallas":
+        return PallasSliceExecutor(cfg, isa)
     raise ValueError(f"unknown VM backend {backend!r}")

@@ -79,25 +79,45 @@ class FleetKernels:
 
     The round is composed from the three refactored layers:
 
-    ``executor``       — :class:`BatchedSliceExecutor`: vmapped ``run_slice``
-                         over the node axis (also the ensemble's lockstep
-                         executor; ``batched_slice`` is its jitted form);
+    ``executor``       — the batched slice engine:
+                         :class:`BatchedSliceExecutor` (vmapped lax
+                         interpreter — also the ensemble's lockstep
+                         executor; ``batched_slice`` is its jitted form) or
+                         :class:`PallasSliceExecutor` (the on-chip Pallas
+                         vmloop kernel with a lax tail for unclaimed
+                         opcodes, ``executor="pallas"``);
     ``route``          — :func:`repro.core.vm.routing.build_router`: the
                          on-device mailbox collective;
     ``round``          — one full fleet round (slice, clock, routing, warp),
-                         pure JAX, state in / state out, device resident.
+                         pure JAX, state in / state out, device resident
+                         (``round_aux`` additionally reports the Pallas
+                         kernel's per-node step counts and bail-outs).
 
     With a mesh, every layer boundary re-asserts the node-axis partition via
     the logical-rules layer, so XLA keeps per-node work shard-local and only
-    the mailbox exchange crosses shards.
+    the mailbox exchange crosses shards (the Pallas kernel runs under
+    ``shard_map``, seeing only the local node shard).
     """
 
-    def __init__(self, cfg: VMConfig, isa: ISA | None = None, mesh=None):
+    def __init__(
+        self,
+        cfg: VMConfig,
+        isa: ISA | None = None,
+        mesh=None,
+        executor: str = "batched",
+    ):
         self.cfg = cfg
         self.isa = isa or get_isa()
         self.mesh = mesh
-        from repro.core.vm.executor import BatchedSliceExecutor
-        self.executor = BatchedSliceExecutor(cfg, isa)
+        self.executor_kind = executor
+        if executor == "pallas":
+            from repro.core.vm.executor import PallasSliceExecutor
+            self.executor = PallasSliceExecutor(cfg, isa, mesh=mesh)
+        elif executor == "batched":
+            from repro.core.vm.executor import BatchedSliceExecutor
+            self.executor = BatchedSliceExecutor(cfg, isa)
+        else:
+            raise ValueError(f"unknown fleet executor {executor!r}")
         self.interp = self.executor.interp
         self._build()
 
@@ -107,6 +127,7 @@ class FleetKernels:
 
         batched_slice = self.executor.run_slice_batched
         self.batched_slice = batched_slice
+        aux_slice = getattr(self.executor, "run_slice_batched_aux", None)
         route = build_router(cfg, self.isa)
         self.route = route
 
@@ -122,10 +143,7 @@ class FleetKernels:
             def constrain(S: VMState) -> VMState:
                 return S
 
-        def fleet_round(S: VMState, steps: int):
-            S = constrain(S)
-            steps0 = S.steps
-            S, _ = batched_slice(S, steps)
+        def post_slice(S: VMState, steps0):
             # Virtual clock from the calibrated per-instruction time
             # (REXAVM.run step 2, per node).
             inc = jnp.maximum(1, (S.steps - steps0) * cfg.us_per_instr // 1000)
@@ -147,19 +165,39 @@ class FleetKernels:
             )
             return constrain(S._replace(now=jnp.where(warp, wake, S.now)))
 
+        def fleet_round(S: VMState, steps: int):
+            S = constrain(S)
+            steps0 = S.steps
+            S, _ = batched_slice(S, steps)
+            return post_slice(S, steps0)
+
         self.round = jax.jit(fleet_round, static_argnames=("steps",))
+
+        if aux_slice is not None:
+            def fleet_round_aux(S: VMState, steps: int):
+                S = constrain(S)
+                steps0 = S.steps
+                S, _, n_exec, bailed = aux_slice(S, steps)
+                return post_slice(S, steps0), n_exec, bailed
+
+            self.round_aux = jax.jit(fleet_round_aux, static_argnames=("steps",))
+        else:
+            self.round_aux = None
 
 
 @functools.lru_cache(maxsize=8)
-def _get_fleet_kernels(cfg: VMConfig, mesh) -> FleetKernels:
-    return FleetKernels(cfg, mesh=mesh)
+def _get_fleet_kernels(cfg: VMConfig, mesh, executor: str) -> FleetKernels:
+    return FleetKernels(cfg, mesh=mesh, executor=executor)
 
 
-def get_fleet_kernels(cfg: VMConfig, mesh=None) -> FleetKernels:
-    """Fleet kernels are expensive to trace — share per (VMConfig, mesh).
-    Normalizes the optional mesh so ``f(cfg)`` and ``f(cfg, None)`` hit the
-    same cache entry (EnsembleVM and FleetVM must share kernels)."""
-    return _get_fleet_kernels(cfg, mesh)
+def get_fleet_kernels(
+    cfg: VMConfig, mesh=None, executor: str = "batched"
+) -> FleetKernels:
+    """Fleet kernels are expensive to trace — share per (VMConfig, mesh,
+    executor).  Normalizes the optional mesh so ``f(cfg)`` and
+    ``f(cfg, None)`` hit the same cache entry (EnsembleVM and FleetVM must
+    share kernels)."""
+    return _get_fleet_kernels(cfg, mesh, executor)
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +244,12 @@ class FleetVM:
     ``h2d``/``d2h`` count full-state syncs; ``h2d_bytes``/``d2h_bytes``
     count all bytes moved either way; ``io_h2d_bytes``/``io_d2h_bytes``
     count just the IO-service share.
+
+    ``executor`` selects the per-node slice engine: ``"batched"`` (vmapped
+    lax interpreter, the default) or ``"pallas"`` (the on-chip
+    ``kernels/vmloop`` fetch/dispatch/stack kernel; unclaimed opcodes bail
+    to a lax tail — see ``pallas_stats()``).  Both are byte-exact vs
+    ``reference_round``.
     """
 
     def __init__(
@@ -217,6 +261,7 @@ class FleetVM:
         nodes: list[REXAVM] | None = None,
         mesh=None,
         io_mode: str = "partial",
+        executor: str = "batched",
     ):
         if nodes is not None:
             assert len(nodes) >= 1
@@ -253,9 +298,10 @@ class FleetVM:
         # The cached kernels are built for the default ISA; a custom-ISA
         # fleet needs its own build (opcode numbering differs).
         if isa is get_isa():
-            self.kernels = get_fleet_kernels(self.cfg, mesh)
+            self.kernels = get_fleet_kernels(self.cfg, mesh, executor)
         else:
-            self.kernels = FleetKernels(self.cfg, isa, mesh)
+            self.kernels = FleetKernels(self.cfg, isa, mesh, executor)
+        self.executor_kind = executor
         self._op_send = isa.opcode["send"]
         self._op_recv = isa.opcode["receive"]
         self._S: VMState | None = None     # device-resident stacked state
@@ -266,6 +312,10 @@ class FleetVM:
         self.h2d_bytes = 0                 # all bytes host -> device
         self.d2h_bytes = 0                 # all bytes device -> host
         self.probes = 0                    # small status probes (tstatus/io_op)
+        # Pallas-executor telemetry (device-side lazy accumulators so the
+        # round loop stays async; see pallas_stats()).
+        self._kernel_steps_acc = 0         # instrs retired inside the kernel
+        self._bailed_acc = 0               # node-rounds that hit a bail-out
 
     @classmethod
     def from_nodes(cls, nodes: list[REXAVM], **kw) -> "FleetVM":
@@ -283,6 +333,16 @@ class FleetVM:
     def io_d2h_bytes(self) -> int:
         """IO-service bytes device -> host (partial mode only)."""
         return self.io_service.d2h_bytes
+
+    def pallas_stats(self) -> dict:
+        """Kernel-executor telemetry: instructions retired inside the
+        Pallas vmloop vs. node-rounds that bailed to the lax tail (zeros
+        under the batched executor)."""
+        return {
+            "executor": self.executor_kind,
+            "kernel_steps": int(self._kernel_steps_acc),
+            "bailed_node_rounds": int(self._bailed_acc),
+        }
 
     def transfer_stats(self) -> dict:
         """All movement counters in one dict (serve monitor / benchmarks)."""
@@ -381,8 +441,15 @@ class FleetVM:
         rounds = 0
         stall = 0
         last_steps_sum = -1
+        round_aux = self.kernels.round_aux
         while rounds < max_rounds:
-            self._S = self.kernels.round(self._S, steps)
+            if round_aux is not None:
+                self._S, n_exec, bailed = round_aux(self._S, steps)
+                # Lazy device-side sums: no sync until pallas_stats().
+                self._kernel_steps_acc = self._kernel_steps_acc + n_exec.sum()
+                self._bailed_acc = self._bailed_acc + bailed.sum()
+            else:
+                self._S = self.kernels.round(self._S, steps)
             rounds += 1
             if rounds % service_every != 0 and rounds < max_rounds:
                 continue

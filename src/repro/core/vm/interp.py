@@ -17,6 +17,12 @@ calls between loop rounds (see ``repro.core.vm.machine``).  The functional
 slice form ``run_slice_fn`` composes under ``vmap``: the fleet runtime
 (``repro.core.vm.fleet``) maps it over a node axis to run N VMs —
 sensor-network nodes or voting replicas — in one device program.
+
+NOTE: the Pallas vmloop kernel (``repro.kernels.vmloop.ref``) carries an
+independent transliteration of this step semantics (as ``oracle.py`` does
+in plain Python) — a semantic change to any op body, the stack pre-check,
+or the exception dispatch below must be mirrored there;
+tests/test_vm_pallas.py is the byte-exactness tripwire.
 """
 
 from __future__ import annotations

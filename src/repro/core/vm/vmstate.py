@@ -123,6 +123,12 @@ def stack_states(states: list[VMState]) -> VMState:
     )
 
 
+def stack1(x) -> jnp.ndarray:
+    """One-node stack: a host field -> device array with a leading node
+    axis (the single-VM view of the batched executors)."""
+    return jnp.asarray(np.asarray(x))[None]
+
+
 def take_nodes(S: VMState, idx) -> VMState:
     """Gather node slices ``idx`` from a stacked fleet state (device op:
     under a node-sharded state this lowers to a cross-shard gather)."""

@@ -5,6 +5,19 @@ Each kernel directory has:
   ops.py    — jit'd public wrapper (padding, reshaping, interpret switch)
   ref.py    — pure-jnp oracle used by the allclose sweeps in tests/
 
+Subsystems:
+  fixmatmul  — int8 fixed-point matmul (paper C4)
+  flashattn  — flash attention
+  lutact     — LUT fixed-point sigmoid (paper Alg. 2, C5)
+  rwkv6_scan — RWKV6 chunked WKV scan
+  vmloop     — the VM fleet's inner interpreter loop: an on-chip
+               fetch/dispatch/stack engine (one grid program per node,
+               per-node machine state in VMEM, flat lax.switch branch
+               table), byte-exact vs the lax interpreter/Oracle over its
+               claimed opcode set and bailing to the lax tail otherwise.
+               Selected per fleet via ``FleetVM(executor="pallas")`` /
+               ``REXAVM(backend="pallas")`` rather than ``use_kernels()``.
+
 On this CPU container kernels run under interpret=True; models select the
 kernel vs jnp path via ``repro.kernels.use_kernels()``.
 """

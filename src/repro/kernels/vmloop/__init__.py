@@ -1,0 +1,33 @@
+"""vmloop — Pallas fetch/dispatch/stack engine for the fleet's inner
+interpreter loop.
+
+Three-file convention (see ``repro.kernels``):
+  vmloop.py — ``pl.pallas_call`` kernel: grid ``(nodes_per_shard,)``, one
+              node's full machine state in VMEM, ``steps`` on-chip
+              fetch/decode/execute iterations over a flat branch table;
+  ops.py    — ``fleet_vmloop``: stacked-VMState wrapper with node-mesh
+              ``shard_map`` and the interpret switch;
+  ref.py    — shared step semantics + ``vmloop_ref``, the pure-jnp oracle
+              (also defines the SUPPORTED/BAILOUT opcode claim).
+
+Selected as a fleet backend via ``FleetVM(executor="pallas")`` /
+``REXAVM(backend="pallas")``.
+"""
+
+from repro.kernels.vmloop.ops import fleet_vmloop
+from repro.kernels.vmloop.ref import (
+    BAILOUT_WORDS,
+    SUPPORTED_WORDS,
+    CoreState,
+    supported_mask,
+    vmloop_ref,
+)
+
+__all__ = [
+    "fleet_vmloop",
+    "vmloop_ref",
+    "CoreState",
+    "SUPPORTED_WORDS",
+    "BAILOUT_WORDS",
+    "supported_mask",
+]

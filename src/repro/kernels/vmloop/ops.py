@@ -1,0 +1,67 @@
+"""Public vmloop op: stacked ``VMState`` in/out, node-mesh shard_map,
+interpret switch.
+
+``fleet_vmloop`` is what :class:`repro.core.vm.executor.PallasSliceExecutor`
+calls inside its jitted batched slice: it extracts the kernel-visible
+:class:`~repro.kernels.vmloop.ref.CoreState` fields from the stacked fleet
+state, dispatches the Pallas kernel, and merges the mutated fields back.
+
+Sharding: when the fleet's node axis is mesh-partitioned (PR 2), the kernel
+must only ever see the *local shard* — a ``pl.pallas_call`` is opaque to
+XLA's SPMD partitioner, so the call is wrapped in ``shard_map`` over the
+mesh's node axis (every CoreState field is node-leading, so a single
+``P(node)`` prefix spec covers the whole pytree).  Non-divisible fleets are
+replicated by ``FleetVM`` (same rule as ``sharding.api.logical``) and take
+the direct path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import VMConfig
+from repro.core.vm.spec import ISA
+from repro.core.vm.vmstate import VMState
+from repro.kernels.vmloop.ref import core_of, merge_core, vmloop_ref
+from repro.kernels.vmloop.vmloop import vmloop_call
+
+
+def fleet_vmloop(
+    S: VMState,
+    steps: int,
+    cfg: VMConfig,
+    isa: ISA | None = None,
+    *,
+    mesh=None,
+    interpret: bool = False,
+):
+    """Advance every node of a stacked fleet state by at most ``steps``
+    in-kernel instructions (bailing per node on unclaimed opcodes).
+
+    Returns ``(S', n_exec (N,) int32, bailed (N,) bool)``; fields outside
+    the kernel's CoreState (out ring, mailboxes, rng, ...) pass through
+    untouched.
+    """
+    core = core_of(S)
+    N = core.pc.shape[0]
+    if mesh is not None:
+        ndev = int(np.prod(mesh.devices.shape))
+        if ndev > 1 and N % ndev == 0:
+            from jax.experimental.shard_map import shard_map
+
+            ax = mesh.axis_names[0]
+            sharded = shard_map(
+                lambda c: vmloop_call(c, steps, cfg, isa, interpret=interpret),
+                mesh=mesh,
+                in_specs=(P(ax),),
+                out_specs=(P(ax), P(ax), P(ax)),
+                check_rep=False,
+            )
+            core, n_exec, bailed = sharded(core)
+            return merge_core(S, core), n_exec, bailed
+    core, n_exec, bailed = vmloop_call(core, steps, cfg, isa, interpret=interpret)
+    return merge_core(S, core), n_exec, bailed
+
+
+__all__ = ["fleet_vmloop", "vmloop_ref"]

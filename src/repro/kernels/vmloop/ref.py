@@ -1,0 +1,777 @@
+"""Shared step semantics + pure-jnp oracle for the vmloop Pallas kernel.
+
+The kernel's contract is *byte-exactness* with the lax interpreter
+(``repro.core.vm.interp``) and the Python ``Oracle`` over the opcode subset
+it claims — the paper's software/hardware operational-equivalence claim
+restated for a TPU kernel backend.  The kernel-side fetch/decode/execute
+step is written once here, in pure jnp over a reduced :class:`CoreState`
+(the VMState fields the claimed opcodes can touch), and used by both
+
+  * :func:`vmloop_ref`          — the pure-jnp oracle (vmapped over nodes),
+    the reference the allclose/byte-exact sweeps in tests compare against;
+  * ``vmloop.vmloop_call``      — the ``pl.pallas_call`` kernel, which runs
+    the very same ``run_core`` loop with the node's state held in VMEM.
+
+Relative to ``interp.py`` this is a deliberate *independent transliteration*
+of the step semantics, exactly as ``oracle.py`` is for plain Python: the
+equivalence suite only proves something because the engines do not share
+one step definition.  The price is hand-synchronization — any semantic
+change to ``interp.Interpreter._build`` (op bodies, stack pre-check,
+exception dispatch) MUST be mirrored in :func:`make_core_step`, and
+tests/test_vm_pallas.py (per-opcode sweep + randomized fleet programs) is
+the tripwire that catches a missed mirror.
+
+Opcode classification
+---------------------
+``SUPPORTED_WORDS`` is the claimed set: stack, arithmetic (incl. the
+64-bit-exact ``*/``), comparison, bitwise, scalar memory, control flow,
+``dlit``, the non-spawning task words, and the exception machinery —
+everything whose per-instruction state touch is a handful of scalar
+gathers/scatters.  ``BAILOUT_WORDS`` are declined: IO/print (``out``/``in``/
+``send``/``receive`` suspend to the host service loop anyway), ``task``
+spawn, the LUT DSP scalars, and the wide vector/ANN ops.  On the first
+declined (or unknown/FIOS) opcode the loop *bails out before executing it*,
+reporting how many instructions it did run, so the host-side lax path can
+finish the slice from a byte-identical intermediate state.  Every ISA word
+MUST appear in exactly one of the two sets — ``supported_mask`` raises
+otherwise, and the ISA coverage test sweeps the claim.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import VMConfig
+from repro.core.vm.interp import STACK_NEEDS, _muldiv, _truncdiv, _truncmod
+from repro.core.vm.spec import (
+    EXC_BOUNDS,
+    EXC_DIVBYZERO,
+    EXC_STACK,
+    EXC_TRAP,
+    ISA,
+    MEM_BASE,
+    NUM_EXC,
+    ST_DONE,
+    ST_ERR,
+    ST_EVENT,
+    ST_FREE,
+    ST_HALT,
+    ST_RUN,
+    ST_SLEEP,
+    ST_YIELD,
+    get_isa,
+)
+from repro.core.vm.vmstate import VMState
+
+I32 = jnp.int32
+
+# VMState fields the supported opcode set can read or write, in VMState
+# order.  Everything else (out ring, mailboxes, rng, io_op, prio/deadline)
+# belongs to declined opcodes and never enters the kernel.
+CORE_FIELDS = (
+    "cs", "mem", "ds", "rs", "fs",
+    "dsp", "rsp", "fsp", "pc", "tstatus",
+    "timeout", "ev_addr", "ev_val",
+    "catch_pc", "catch_rsp", "pending_exc", "last_exc",
+    "handlers", "cur", "now", "steps",
+)
+SCALAR_FIELDS = ("cur", "now", "steps")
+READONLY_FIELDS = ("cur", "now")      # never written by a supported opcode
+MUTATED_FIELDS = tuple(f for f in CORE_FIELDS if f not in READONLY_FIELDS)
+
+
+class Tables(NamedTuple):
+    """Constant dispatch tables, passed as explicit kernel operands (a Pallas
+    kernel cannot close over array constants).  All int32, shape
+    ``(num_ops + 1,)``; ``sup`` is the opcode claim mask (0/1), the rest are
+    the stack-effect pre-check of ``interp.exec_op``."""
+
+    sup: jnp.ndarray
+    din: jnp.ndarray
+    dout: jnp.ndarray
+    fin: jnp.ndarray
+    fout: jnp.ndarray
+
+
+class CoreState(NamedTuple):
+    """One node's kernel-visible machine state (see CORE_FIELDS)."""
+
+    cs: jnp.ndarray          # (CS,)
+    mem: jnp.ndarray         # (MEM,)
+    ds: jnp.ndarray          # (T, DS)
+    rs: jnp.ndarray          # (T, RS)
+    fs: jnp.ndarray          # (T, FS)
+    dsp: jnp.ndarray         # (T,)
+    rsp: jnp.ndarray         # (T,)
+    fsp: jnp.ndarray         # (T,)
+    pc: jnp.ndarray          # (T,)
+    tstatus: jnp.ndarray     # (T,)
+    timeout: jnp.ndarray     # (T,)
+    ev_addr: jnp.ndarray     # (T,)
+    ev_val: jnp.ndarray      # (T,)
+    catch_pc: jnp.ndarray    # (T,)
+    catch_rsp: jnp.ndarray   # (T,)
+    pending_exc: jnp.ndarray # (T,)
+    last_exc: jnp.ndarray    # (T,)
+    handlers: jnp.ndarray    # (NUM_EXC,)
+    cur: jnp.ndarray         # ()
+    now: jnp.ndarray         # ()  read-only
+    steps: jnp.ndarray       # ()
+
+
+# --- opcode classification (must partition the whole word list) -------------
+
+SUPPORTED_WORDS = (
+    # stack
+    "nop", "dup", "drop", "swap", "over", "rot", "nip", "tuck", "pick",
+    "2dup", "2drop", "depth",
+    # arithmetic
+    "+", "-", "*", "/", "mod", "*/", "negate", "abs", "min", "max",
+    "1+", "1-", "2*", "2/",
+    # comparison
+    "=", "<>", "<", ">", "<=", ">=", "0=", "0<", "0>",
+    # bitwise
+    "and", "or", "xor", "invert", "lshift", "rshift",
+    # scalar memory (unified CS/DIOS address space)
+    "@", "!", "+!", "get", "put", "push", "pop", "len",
+    # control flow
+    "branch", "0branch", "ret", "exit", "exec",
+    "doinit", "doloop", "i", "j", "unloop", "halt", "end",
+    # literals
+    "dlit",
+    # tasks (non-spawning)
+    "yield", "sleep", "await", "taskid", "ms", "steps",
+    # exceptions
+    "exception", "catch", "throw",
+)
+
+BAILOUT_WORDS = (
+    # IO / printing (out/in/send/receive suspend to the host loop)
+    ".", "emit", "cr", "prstr", "vecprint", "out", "in", "send", "receive",
+    # wide array fill + task spawn + LCG
+    "fill", "task", "rnd",
+    # LUT fixed-point DSP scalars
+    "sin", "log", "sigmoid", "relu", "sqrt",
+    # vector / ANN ops
+    "vecload", "vecscale", "vecadd", "vecmul", "vecfold", "vecmap",
+    "dotprod", "vecmax", "hull", "lowp", "highp",
+)
+
+
+def supported_mask(isa: ISA | None = None) -> np.ndarray:
+    """(num_ops + 1,) bool: kernel-claimed opcodes.  Index ``num_ops`` (the
+    clip target for out-of-table opcodes, i.e. FIOS calls and traps) is
+    always False.  Raises if any ISA word is unclassified or double-listed —
+    adding a word to the ISA forces an explicit claim/decline here."""
+    isa = isa or get_isa()
+    sup, bail = set(SUPPORTED_WORDS), set(BAILOUT_WORDS)
+    both = sup & bail
+    if both:
+        raise RuntimeError(f"words claimed and declined: {sorted(both)}")
+    mask = np.zeros(isa.num_ops + 1, bool)
+    for code in range(isa.num_ops):
+        nm = isa.name[code]
+        if nm in sup:
+            mask[code] = True
+        elif nm not in bail:
+            raise RuntimeError(
+                f"ISA word {nm!r} is neither in SUPPORTED_WORDS nor "
+                f"BAILOUT_WORDS — classify it for the vmloop kernel"
+            )
+    return mask
+
+
+def make_tables(isa: ISA | None = None) -> Tables:
+    """Numpy dispatch tables for one ISA (see :class:`Tables`)."""
+    isa = isa or get_isa()
+    num_ops = isa.num_ops
+    sup = supported_mask(isa)
+    din = np.zeros(num_ops + 1, np.int32)
+    dout = np.zeros(num_ops + 1, np.int32)
+    fin = np.zeros(num_ops + 1, np.int32)
+    fout = np.zeros(num_ops + 1, np.int32)
+    for code in range(num_ops):
+        d_in, d_out, f_in, f_out = STACK_NEEDS.get(isa.name[code], (0, 0, 0, 0))
+        din[code], dout[code] = d_in, d_out
+        fin[code], fout[code] = f_in, f_out
+    return Tables(
+        sup=sup.astype(np.int32), din=din, dout=dout, fin=fin, fout=fout
+    )
+
+
+# --- VMState <-> CoreState ---------------------------------------------------
+
+def core_of(S: VMState) -> CoreState:
+    """Extract the kernel-visible fields (works stacked or single-node)."""
+    return CoreState(*[getattr(S, f) for f in CORE_FIELDS])
+
+
+def merge_core(S: VMState, core: CoreState) -> VMState:
+    """Write the kernel's mutated fields back into the full state."""
+    return S._replace(**{f: getattr(core, f) for f in MUTATED_FIELDS})
+
+
+# --- the step function (mirrors interp.step_instr over CoreState) ------------
+
+def make_core_step(cfg: VMConfig, isa: ISA | None = None):
+    """Returns ``(step_instr, instr_supported)`` over :class:`CoreState`.
+
+    ``step_instr`` is a transliteration of
+    :meth:`repro.core.vm.interp.Interpreter._build`'s step for the supported
+    subset — same helpers, same clip patterns, same exception dispatch — so
+    a supported instruction produces bit-identical state on either engine.
+    ``instr_supported`` is the bail predicate, evaluated on the *fetched*
+    instruction before any state is touched.
+    """
+    isa = isa or get_isa()
+    CS, MEM = cfg.cs_size, cfg.mem_size
+    DS, RS, FS = cfg.ds_size, cfg.rs_size, cfg.fs_size
+
+    # -- low-level helpers (identical to interp._build) ----------------------
+
+    def dpeek(st, k=1):
+        t = st.cur
+        return st.ds[t, jnp.maximum(st.dsp[t] - k, 0)]
+
+    def dpop1(st):
+        t = st.cur
+        v = st.ds[t, jnp.maximum(st.dsp[t] - 1, 0)]
+        return st._replace(dsp=st.dsp.at[t].add(-1)), v
+
+    def dpopn(st, n):
+        t = st.cur
+        vals = tuple(
+            st.ds[t, jnp.maximum(st.dsp[t] - n + k, 0)] for k in range(n)
+        )
+        return st._replace(dsp=st.dsp.at[t].add(-n)), vals
+
+    def dpush(st, v):
+        t = st.cur
+        return st._replace(
+            ds=st.ds.at[t, jnp.clip(st.dsp[t], 0, DS - 1)].set(
+                v.astype(I32) if hasattr(v, "astype") else I32(v)
+            ),
+            dsp=st.dsp.at[t].add(1),
+        )
+
+    def fpush(st, v):
+        t = st.cur
+        return st._replace(
+            fs=st.fs.at[t, jnp.clip(st.fsp[t], 0, FS - 1)].set(v),
+            fsp=st.fsp.at[t].add(1),
+        )
+
+    def set_pc(st, pc):
+        return st._replace(pc=st.pc.at[st.cur].set(pc.astype(I32)))
+
+    def cur_pc(st):
+        return st.pc[st.cur]
+
+    def raise_exc(st, code):
+        t = st.cur
+        return st._replace(
+            pending_exc=st.pending_exc.at[t].set(
+                jnp.where(st.pending_exc[t] == 0, code, st.pending_exc[t])
+            )
+        )
+
+    def set_status(st, s):
+        return st._replace(tstatus=st.tstatus.at[st.cur].set(s))
+
+    def addr_valid(addr):
+        in_cs = (addr >= 0) & (addr < CS)
+        in_mem = (addr >= MEM_BASE) & (addr < MEM_BASE + MEM)
+        return in_cs | in_mem
+
+    def mread(st, addr):
+        in_mem = addr >= MEM_BASE
+        cs_v = st.cs[jnp.clip(addr, 0, CS - 1)]
+        mem_v = st.mem[jnp.clip(addr - MEM_BASE, 0, MEM - 1)]
+        return jnp.where(in_mem, mem_v, cs_v)
+
+    def mwrite(st, addr, v):
+        v = v.astype(I32)
+        in_mem = addr >= MEM_BASE
+        cs_idx = jnp.where(in_mem, CS, jnp.clip(addr, 0, CS - 1))
+        mem_idx = jnp.where(in_mem, jnp.clip(addr - MEM_BASE, 0, MEM - 1), MEM)
+        return st._replace(
+            cs=st.cs.at[cs_idx].set(v, mode="drop"),
+            mem=st.mem.at[mem_idx].set(v, mode="drop"),
+        )
+
+    # -- opcode implementations ----------------------------------------------
+
+    def bin_op(f):
+        def op(st):
+            st, (a, b) = dpopn(st, 2)
+            return dpush(st, f(a, b))
+        return op
+
+    def un_op(f):
+        def op(st):
+            st, v = dpop1(st)
+            return dpush(st, f(v))
+        return op
+
+    def cmp_op(f):
+        return bin_op(lambda a, b: jnp.where(f(a, b), I32(-1), I32(0)))
+
+    B: dict[str, Callable] = {}
+
+    B["nop"] = lambda st: st
+    B["dup"] = lambda st: dpush(st, dpeek(st))
+
+    def op_drop(st):
+        st, _ = dpop1(st)
+        return st
+    B["drop"] = op_drop
+
+    def op_swap(st):
+        st, (a, b) = dpopn(st, 2)
+        return dpush(dpush(st, b), a)
+    B["swap"] = op_swap
+
+    B["over"] = lambda st: dpush(st, dpeek(st, 2))
+
+    def op_rot(st):
+        st, (a, b, c) = dpopn(st, 3)
+        return dpush(dpush(dpush(st, b), c), a)
+    B["rot"] = op_rot
+
+    def op_nip(st):
+        st, (a, b) = dpopn(st, 2)
+        return dpush(st, b)
+    B["nip"] = op_nip
+
+    def op_tuck(st):
+        st, (a, b) = dpopn(st, 2)
+        return dpush(dpush(dpush(st, b), a), b)
+    B["tuck"] = op_tuck
+
+    def op_pick(st):
+        st, n = dpop1(st)
+        t = st.cur
+        idx = jnp.clip(st.dsp[t] - 1 - n, 0, DS - 1)
+        bad = (n < 0) | (n >= st.dsp[t])
+        st = dpush(st, st.ds[t, idx])
+        return lax.cond(bad, lambda s: raise_exc(s, EXC_STACK), lambda s: s, st)
+    B["pick"] = op_pick
+
+    def op_2dup(st):
+        a, b = dpeek(st, 2), dpeek(st, 1)
+        return dpush(dpush(st, a), b)
+    B["2dup"] = op_2dup
+
+    def op_2drop(st):
+        st, _ = dpopn(st, 2)
+        return st
+    B["2drop"] = op_2drop
+
+    B["depth"] = lambda st: dpush(st, st.dsp[st.cur])
+
+    B["+"] = bin_op(lambda a, b: a + b)
+    B["-"] = bin_op(lambda a, b: a - b)
+    B["*"] = bin_op(lambda a, b: a * b)
+
+    def op_div(st):
+        st, (a, b) = dpopn(st, 2)
+        st = dpush(st, _truncdiv(a, b))
+        return lax.cond(b == 0, lambda s: raise_exc(s, EXC_DIVBYZERO), lambda s: s, st)
+    B["/"] = op_div
+
+    def op_mod(st):
+        st, (a, b) = dpopn(st, 2)
+        st = dpush(st, _truncmod(a, b))
+        return lax.cond(b == 0, lambda s: raise_exc(s, EXC_DIVBYZERO), lambda s: s, st)
+    B["mod"] = op_mod
+
+    def op_muldiv(st):
+        st, (a, b, c) = dpopn(st, 3)
+        st = dpush(st, _muldiv(a, b, c))
+        return lax.cond(c == 0, lambda s: raise_exc(s, EXC_DIVBYZERO), lambda s: s, st)
+    B["*/"] = op_muldiv
+
+    B["negate"] = un_op(lambda v: -v)
+    B["abs"] = un_op(jnp.abs)
+    B["min"] = bin_op(jnp.minimum)
+    B["max"] = bin_op(jnp.maximum)
+    B["1+"] = un_op(lambda v: v + 1)
+    B["1-"] = un_op(lambda v: v - 1)
+    B["2*"] = un_op(lambda v: v * 2)
+    B["2/"] = un_op(lambda v: v >> 1)
+
+    B["="] = cmp_op(lambda a, b: a == b)
+    B["<>"] = cmp_op(lambda a, b: a != b)
+    B["<"] = cmp_op(lambda a, b: a < b)
+    B[">"] = cmp_op(lambda a, b: a > b)
+    B["<="] = cmp_op(lambda a, b: a <= b)
+    B[">="] = cmp_op(lambda a, b: a >= b)
+    B["0="] = un_op(lambda v: jnp.where(v == 0, I32(-1), I32(0)))
+    B["0<"] = un_op(lambda v: jnp.where(v < 0, I32(-1), I32(0)))
+    B["0>"] = un_op(lambda v: jnp.where(v > 0, I32(-1), I32(0)))
+
+    B["and"] = bin_op(jnp.bitwise_and)
+    B["or"] = bin_op(jnp.bitwise_or)
+    B["xor"] = bin_op(jnp.bitwise_xor)
+    B["invert"] = un_op(jnp.bitwise_not)
+    B["lshift"] = bin_op(lambda a, n: a << (n & 31))
+    B["rshift"] = bin_op(lambda a, n: a >> (n & 31))
+
+    def op_fetch(st):
+        st, addr = dpop1(st)
+        st = dpush(st, mread(st, addr))
+        return lax.cond(addr_valid(addr), lambda s: s, lambda s: raise_exc(s, EXC_BOUNDS), st)
+    B["@"] = op_fetch
+
+    def op_store(st):
+        st, (v, addr) = dpopn(st, 2)
+        st = mwrite(st, addr, v)
+        return lax.cond(addr_valid(addr), lambda s: s, lambda s: raise_exc(s, EXC_BOUNDS), st)
+    B["!"] = op_store
+
+    def op_addstore(st):
+        st, (v, addr) = dpopn(st, 2)
+        st = mwrite(st, addr, mread(st, addr) + v)
+        return lax.cond(addr_valid(addr), lambda s: s, lambda s: raise_exc(s, EXC_BOUNDS), st)
+    B["+!"] = op_addstore
+
+    def op_get(st):
+        st, (n, arr) = dpopn(st, 2)
+        ln = mread(st, arr - 1)
+        bad = (n < 0) | (n >= ln)
+        st = dpush(st, mread(st, arr + jnp.clip(n, 0, jnp.maximum(ln - 1, 0))))
+        return lax.cond(bad, lambda s: raise_exc(s, EXC_BOUNDS), lambda s: s, st)
+    B["get"] = op_get
+
+    def op_put(st):
+        st, (v, n, arr) = dpopn(st, 3)
+        ln = mread(st, arr - 1)
+        bad = (n < 0) | (n >= ln)
+        st = lax.cond(bad, lambda s: s, lambda s: mwrite(s, arr + n, v), st)
+        return lax.cond(bad, lambda s: raise_exc(s, EXC_BOUNDS), lambda s: s, st)
+    B["put"] = op_put
+
+    def op_push(st):
+        st, (v, arr) = dpopn(st, 2)
+        top = mread(st, arr)
+        ln = mread(st, arr - 1)
+        bad = top + 1 >= ln
+
+        def do(s):
+            s = mwrite(s, arr + top + 1, v)
+            return mwrite(s, arr, top + 1)
+        return lax.cond(bad, lambda s: raise_exc(s, EXC_BOUNDS), do, st)
+    B["push"] = op_push
+
+    def op_pop(st):
+        st, arr = dpop1(st)
+        top = mread(st, arr)
+        bad = top <= 0
+        v = mread(st, arr + jnp.maximum(top, 1))
+        st = dpush(st, jnp.where(bad, 0, v))
+        st = lax.cond(
+            bad,
+            lambda s: raise_exc(s, EXC_BOUNDS),
+            lambda s: mwrite(s, arr, top - 1),
+            st,
+        )
+        return st
+    B["pop"] = op_pop
+
+    def op_len(st):
+        st, arr = dpop1(st)
+        return dpush(st, mread(st, arr - 1))
+    B["len"] = op_len
+
+    # control ----------------------------------------------------------------
+
+    def op_branch(st):
+        tgt = st.cs[jnp.clip(cur_pc(st), 0, CS - 1)]
+        return set_pc(st, tgt)
+    B["branch"] = op_branch
+
+    def op_0branch(st):
+        st, f = dpop1(st)
+        pc = cur_pc(st)
+        tgt = st.cs[jnp.clip(pc, 0, CS - 1)]
+        return set_pc(st, jnp.where(f == 0, tgt, pc + 1))
+    B["0branch"] = op_0branch
+
+    def op_ret(st):
+        t = st.cur
+        under = st.rsp[t] < 1
+        addr = st.rs[t, jnp.maximum(st.rsp[t] - 1, 0)]
+        st = st._replace(rsp=st.rsp.at[t].add(-1))
+        st = set_pc(st, addr)
+        return lax.cond(
+            under,
+            lambda s: set_status(raise_exc(s, EXC_STACK), ST_ERR),
+            lambda s: s,
+            st,
+        )
+    B["ret"] = op_ret
+    B["exit"] = op_ret
+
+    def op_exec(st):
+        st, addr = dpop1(st)
+        t = st.cur
+        over = st.rsp[t] >= RS
+        st = st._replace(
+            rs=st.rs.at[t, jnp.clip(st.rsp[t], 0, RS - 1)].set(cur_pc(st)),
+            rsp=st.rsp.at[t].add(1),
+        )
+        st = set_pc(st, addr)
+        return lax.cond(over, lambda s: raise_exc(s, EXC_STACK), lambda s: s, st)
+    B["exec"] = op_exec
+
+    def op_doinit(st):
+        st, (limit, start_v) = dpopn(st, 2)
+        return fpush(fpush(st, limit), start_v)
+    B["doinit"] = op_doinit
+
+    def op_doloop(st):
+        t = st.cur
+        pc = cur_pc(st)
+        top_addr = st.cs[jnp.clip(pc, 0, CS - 1)]
+        limit = st.fs[t, jnp.maximum(st.fsp[t] - 2, 0)]
+        ctr = st.fs[t, jnp.maximum(st.fsp[t] - 1, 0)] + 1
+        done = ctr >= limit
+        st = st._replace(
+            fs=st.fs.at[t, jnp.maximum(st.fsp[t] - 1, 0)].set(ctr),
+            fsp=st.fsp.at[t].add(jnp.where(done, -2, 0)),
+        )
+        return set_pc(st, jnp.where(done, pc + 1, top_addr))
+    B["doloop"] = op_doloop
+
+    B["i"] = lambda st: dpush(st, st.fs[st.cur, jnp.maximum(st.fsp[st.cur] - 1, 0)])
+    B["j"] = lambda st: dpush(st, st.fs[st.cur, jnp.maximum(st.fsp[st.cur] - 3, 0)])
+
+    B["unloop"] = lambda st: st._replace(fsp=st.fsp.at[st.cur].add(-2))
+
+    B["halt"] = lambda st: set_status(st, ST_HALT)
+
+    def op_end(st):
+        s = jnp.where(st.cur == 0, ST_DONE, ST_FREE)
+        return set_status(st, s)
+    B["end"] = op_end
+
+    def op_dlit(st):
+        pc = cur_pc(st)
+        v = st.cs[jnp.clip(pc, 0, CS - 1)]
+        return set_pc(dpush(st, v), pc + 1)
+    B["dlit"] = op_dlit
+
+    # tasks (non-spawning) ----------------------------------------------------
+
+    B["yield"] = lambda st: set_status(st, ST_YIELD)
+
+    def op_sleep(st):
+        st, ms_v = dpop1(st)
+        t = st.cur
+        st = st._replace(timeout=st.timeout.at[t].set(st.now + ms_v))
+        return set_status(st, ST_SLEEP)
+    B["sleep"] = op_sleep
+
+    def op_await(st):
+        st, (ms_v, val, addr) = dpopn(st, 3)
+        t = st.cur
+        st = st._replace(
+            timeout=st.timeout.at[t].set(st.now + ms_v),
+            ev_addr=st.ev_addr.at[t].set(addr),
+            ev_val=st.ev_val.at[t].set(val),
+        )
+        return set_status(st, ST_EVENT)
+    B["await"] = op_await
+
+    B["taskid"] = lambda st: dpush(st, st.cur)
+    B["ms"] = lambda st: dpush(st, st.now)
+    B["steps"] = lambda st: dpush(st, st.steps)
+
+    # exceptions --------------------------------------------------------------
+
+    def op_exception(st):
+        st, (handler, exc) = dpopn(st, 2)
+        idx = jnp.clip(exc, 0, NUM_EXC - 1)
+        return st._replace(handlers=st.handlers.at[idx].set(handler))
+    B["exception"] = op_exception
+
+    def op_catch(st):
+        t = st.cur
+        st = dpush(st, st.last_exc[t])
+        return st._replace(
+            last_exc=st.last_exc.at[t].set(0),
+            catch_pc=st.catch_pc.at[t].set(cur_pc(st) - 1),
+            catch_rsp=st.catch_rsp.at[t].set(st.rsp[t]),
+        )
+    B["catch"] = op_catch
+
+    def op_throw(st):
+        st, exc = dpop1(st)
+        return raise_exc(st, jnp.clip(exc, 1, NUM_EXC - 1))
+    B["throw"] = op_throw
+
+    # -- branch table over the whole opcode space -----------------------------
+
+    num_ops = isa.num_ops
+    sup = supported_mask(isa)
+    branches: list[Callable] = []
+    identity = lambda st: st    # declined opcodes bail before dispatch
+    for code in range(num_ops):
+        nm = isa.name[code]
+        if sup[code]:
+            fn = B.get(nm)
+            if fn is None:
+                raise RuntimeError(
+                    f"opcode {nm!r} claimed by SUPPORTED_WORDS but missing "
+                    f"from the vmloop branch table"
+                )
+        else:
+            fn = identity
+        branches.append(fn)
+    branches.append(identity)   # >= num_ops (FIOS/trap): always bails first
+
+    def exec_op(st, opcode, tb: Tables):
+        code = jnp.clip(opcode, 0, num_ops).astype(I32)
+        t = st.cur
+        din = tb.din[code]
+        dout = tb.dout[code]
+        fin = tb.fin[code]
+        fout = tb.fout[code]
+        under = (st.dsp[t] < din) | (st.fsp[t] < fin)
+        over = (st.dsp[t] - din + dout > DS) | (st.fsp[t] - fin + fout > FS)
+        bad = under | over
+
+        def good(s):
+            return lax.switch(code, branches, s)
+        return lax.cond(bad, lambda s: raise_exc(s, EXC_STACK), good, st)
+
+    def step_instr(st: CoreState, tb: Tables) -> CoreState:
+        t = st.cur
+        pc = st.pc[t]
+        pc_ok = (pc >= 0) & (pc < CS)
+        instr = st.cs[jnp.clip(pc, 0, CS - 1)]
+        tag = instr & 3
+        payload = (instr >> 2).astype(I32)
+
+        def case_op(s):
+            s = set_pc(s, pc + 1)
+            return exec_op(s, payload, tb)
+
+        def case_lit(s):
+            s = set_pc(s, pc + 1)
+            over = s.dsp[t] >= DS
+            return lax.cond(
+                over, lambda x: raise_exc(x, EXC_STACK), lambda x: dpush(x, payload), s
+            )
+
+        def case_call(s):
+            over = s.rsp[t] >= RS
+
+            def do(x):
+                x = x._replace(
+                    rs=x.rs.at[t, jnp.clip(x.rsp[t], 0, RS - 1)].set(pc + 1),
+                    rsp=x.rsp.at[t].add(1),
+                )
+                return set_pc(x, payload)
+            return lax.cond(over, lambda x: raise_exc(x, EXC_STACK), do, s)
+
+        def case_bad(s):
+            return raise_exc(set_pc(s, pc + 1), EXC_TRAP)
+
+        st = lax.cond(
+            pc_ok,
+            lambda s: lax.switch(tag, [case_op, case_lit, case_call, case_bad], s),
+            lambda s: set_status(raise_exc(s, EXC_TRAP), ST_ERR),
+            st,
+        )
+        st = st._replace(steps=st.steps + 1)
+
+        # Exception dispatch (identical to interp.step_instr).
+        exc = st.pending_exc[st.cur]
+
+        def dispatch(s):
+            t2 = s.cur
+            code = jnp.clip(s.pending_exc[t2], 0, NUM_EXC - 1)
+            handler = s.handlers[code]
+            has = handler > 0
+
+            def with_handler(x):
+                crsp = jnp.clip(x.catch_rsp[t2], 0, RS - 1)
+                x = x._replace(
+                    rs=x.rs.at[t2, crsp].set(x.catch_pc[t2]),
+                    rsp=x.rsp.at[t2].set(crsp + 1),
+                    last_exc=x.last_exc.at[t2].set(code),
+                    pending_exc=x.pending_exc.at[t2].set(0),
+                )
+                return set_pc(x, handler)
+
+            def no_handler(x):
+                x = x._replace(
+                    last_exc=x.last_exc.at[t2].set(code),
+                    pending_exc=x.pending_exc.at[t2].set(0),
+                )
+                return set_status(x, ST_ERR)
+            return lax.cond(has, with_handler, no_handler, s)
+        st = lax.cond(exc > 0, dispatch, lambda s: s, st)
+        return st
+
+    def instr_supported(st: CoreState, tb: Tables):
+        """True iff the *next* instruction may execute in-kernel.  Non-OP
+        tags and invalid pcs are always supported (they are the exact trap/
+        literal/call semantics of the lax interpreter); OP tags consult the
+        claim mask — index ``num_ops`` (FIOS and out-of-table traps) is
+        False, so those bail to the host path."""
+        t = st.cur
+        pc = st.pc[t]
+        pc_ok = (pc >= 0) & (pc < CS)
+        instr = st.cs[jnp.clip(pc, 0, CS - 1)]
+        tag = instr & 3
+        payload = (instr >> 2).astype(I32)
+        op_ok = tb.sup[jnp.clip(payload, 0, num_ops)] != 0
+        return jnp.where(pc_ok & (tag == 0), op_ok, True)
+
+    return step_instr, instr_supported
+
+
+def make_run_core(cfg: VMConfig, isa: ISA | None = None):
+    """Returns ``run_core(core, tables, steps) -> (core, n_exec, bailed)``:
+    the fetch/dispatch/execute loop of Alg. 1, restricted to the claimed
+    opcode set.  Stops on slice exhaustion, a status change
+    (suspend/halt/error), or the first unclaimed opcode — in the last case
+    *before* executing it, so the host-side lax interpreter resumes from
+    identical state."""
+    step_instr, instr_supported = make_core_step(cfg, isa)
+
+    def run_core(core: CoreState, tb: Tables, steps):
+        def cond(carry):
+            s, n, bailed = carry
+            return (n < steps) & (s.tstatus[s.cur] == ST_RUN) & (~bailed)
+
+        def body(carry):
+            s, n, bailed = carry
+            ok = instr_supported(s, tb)
+            s = lax.cond(ok, lambda x: step_instr(x, tb), lambda x: x, s)
+            return s, n + jnp.where(ok, 1, 0).astype(I32), ~ok
+
+        core, n, bailed = lax.while_loop(
+            cond, body, (core, jnp.int32(0), jnp.bool_(False))
+        )
+        return core, n, bailed
+
+    return run_core
+
+
+def vmloop_ref(S: VMState, steps: int, cfg: VMConfig, isa: ISA | None = None):
+    """Pure-jnp oracle for the kernel: the same ``run_core`` loop vmapped
+    over the node axis of a stacked fleet state.  Returns
+    ``(S', n_exec (N,), bailed (N,) bool)``."""
+    run_core = make_run_core(cfg, isa)
+    tb = Tables(*[jnp.asarray(x) for x in make_tables(isa)])
+    core = core_of(S)
+    core, n_exec, bailed = jax.vmap(lambda c: run_core(c, tb, steps))(core)
+    return merge_core(S, core), n_exec, bailed

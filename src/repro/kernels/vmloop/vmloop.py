@@ -1,0 +1,136 @@
+"""Pallas VM-loop kernel: on-chip fetch/dispatch/stack engine per node.
+
+One grid program per fleet node.  The node's entire kernel-visible machine
+state — code segment, DIOS memory, the per-task data/return/loop stacks,
+pointers, and exception table — is block-mapped into VMEM; the program then
+runs up to ``steps`` fetch/decode/execute iterations of
+:func:`repro.kernels.vmloop.ref.make_run_core` *entirely on chip*: a
+``lax.while_loop`` around a flat ``lax.switch`` branch table (the paper's
+branch look-up table decoder, §3.10), with zero HBM traffic between
+instructions.  This is the repo's analogue of the paper's FPGA
+implementation of the very same VM: one bytecode semantics, one software
+(lax/oracle) engine and one "hardware" (Pallas) engine, byte-exact.
+
+Bail-out protocol: the loop stops *before* the first instruction outside
+the claimed opcode set (IO-suspending words, FIOS calls, vector/DSP ops —
+see ``ref.SUPPORTED_WORDS``/``ref.BAILOUT_WORDS``) and reports per node how
+many instructions it executed plus a bailed flag.  The caller finishes the
+slice with the lax interpreter from the byte-identical intermediate state
+(``executor.PallasSliceExecutor``), so mixed slices — some nodes computing,
+some suspending on ``send``/``out`` mid-slice — stay exact.
+
+Grid/BlockSpec layout: grid ``(nodes_per_shard,)``; every input/output
+block is one node's row (``(1, ...)`` blocks, index map ``i -> (i, 0...)``),
+so node ``i``'s state is the only VMEM-resident data of program ``i`` and
+the grid is embarrassingly parallel (``dimension_semantics=("parallel",)``).
+Scalars ride as ``(1, 1)`` blocks (TPU scalars must be 2-D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.config import VMConfig
+from repro.core.vm.spec import ISA
+from repro.kernels import tpu_compiler_params
+from repro.kernels.vmloop.ref import (
+    CORE_FIELDS,
+    MUTATED_FIELDS,
+    SCALAR_FIELDS,
+    CoreState,
+    Tables,
+    make_run_core,
+    make_tables,
+)
+
+
+def _spec(per_node_shape: tuple[int, ...]) -> pl.BlockSpec:
+    """One node's row of a stacked field: block (1, ...), block index i."""
+    nrest = len(per_node_shape)
+    return pl.BlockSpec(
+        (1,) + per_node_shape,
+        lambda i, nrest=nrest: (i,) + (0,) * nrest,
+    )
+
+
+def vmloop_call(
+    core: CoreState,
+    steps: int,
+    cfg: VMConfig,
+    isa: ISA | None = None,
+    *,
+    interpret: bool = False,
+):
+    """Run the on-chip vmloop over a stacked (node-leading) ``CoreState``.
+
+    Returns ``(core', n_exec (N,) int32, bailed (N,) bool)``.  ``steps`` is
+    static (the micro-slice budget).  ``interpret=True`` lowers the kernel
+    through the Pallas interpreter — the CPU-testable path the equivalence
+    suite pins byte-exactly against the lax interpreter and the Oracle.
+    """
+    N = core.pc.shape[0]
+    run_core = make_run_core(cfg, isa)
+    # Constant dispatch tables ride along as (1, L) operands replicated to
+    # every grid program (a kernel cannot capture array constants).
+    tables = make_tables(isa)
+    L = tables.sup.shape[0]
+
+    # TPU scalars must be 2-D: stacked () fields travel as (N, 1) blocks.
+    core2 = core._replace(
+        **{f: getattr(core, f).reshape(N, 1) for f in SCALAR_FIELDS}
+    )
+    ins = [getattr(core2, f) for f in CORE_FIELDS]
+    ins += [jnp.asarray(t).reshape(1, L) for t in tables]
+    per_shape = {f: tuple(getattr(core2, f).shape[1:]) for f in CORE_FIELDS}
+    out_fields = list(MUTATED_FIELDS) + ["n_exec", "bailed"]
+    out_shape = {**per_shape, "n_exec": (1,), "bailed": (1,)}
+    n_core = len(CORE_FIELDS)
+    n_tab = len(Tables._fields)
+
+    def kernel(*refs):
+        in_refs = refs[:n_core]
+        tab_refs = refs[n_core:n_core + n_tab]
+        out_refs = refs[n_core + n_tab:]
+        vals = {}
+        for f, r in zip(CORE_FIELDS, in_refs):
+            v = r[...][0]                       # (1, ...) block -> node row
+            if f in SCALAR_FIELDS:
+                v = v[0]                        # (1,) -> ()
+            vals[f] = v
+        st = CoreState(**vals)
+        tb = Tables(*[r[...][0] for r in tab_refs])
+        st, n, bailed = run_core(st, tb, steps)
+        for f, r in zip(MUTATED_FIELDS, out_refs):
+            if f in SCALAR_FIELDS:
+                r[0, 0] = getattr(st, f)
+            else:
+                r[0] = getattr(st, f)
+        out_refs[-2][0, 0] = n
+        out_refs[-1][0, 0] = jnp.where(bailed, 1, 0).astype(jnp.int32)
+
+    tab_spec = pl.BlockSpec((1, L), lambda i: (0, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(N,),
+        in_specs=[_spec(per_shape[f]) for f in CORE_FIELDS]
+        + [tab_spec] * n_tab,
+        out_specs=[_spec(out_shape[f]) for f in out_fields],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,) + out_shape[f], jnp.int32)
+            for f in out_fields
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(*ins)
+
+    named = dict(zip(out_fields, outs))
+    n_exec = named.pop("n_exec")[:, 0]
+    bailed = named.pop("bailed")[:, 0].astype(bool)
+    for f in SCALAR_FIELDS:
+        if f in named:
+            named[f] = named[f][:, 0]
+    return core._replace(**named), n_exec, bailed
