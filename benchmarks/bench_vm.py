@@ -186,6 +186,68 @@ def bench_fleet_pallas(n: int = 64, lax_steps_per_s: float | None = None):
     return steps / dt, stats, steps
 
 
+def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
+    """Hot single-program fleet: every node grinds the same compute loop
+    (``BENCH_PROG``), the trace-JIT's best case — one program group, one
+    recorded trace, the whole-fleet fast path, no dispatch.  The same
+    workload also runs on the generic vmapped interpreter
+    (``executor="batched"``), whose vmapped ``lax.switch`` evaluates every
+    opcode branch per step, so the row captures the specialized-vs-generic
+    steps/s split plus the guard-exit count and specialized fraction."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+    # A shortened BENCH_PROG: the generic vmapped interpreter grinds this
+    # ~2 orders of magnitude slower than the specialized path, so the
+    # comparison leg budgets the row's wall time.
+    prog = ": work 0 begin 1+ dup 500 >= until drop ; work work halt"
+
+    def build(executor: str) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor=executor)
+        for node in fleet.nodes:
+            node.launch(node.load(prog))
+        return fleet
+
+    results = {}
+    stats = None
+    warm_stats = None
+    rounds = 0
+    for executor in ("batched", "trace"):
+        warm = build(executor)          # compile / record+compile once
+        warm.run(max_rounds=2, steps=cfg.steps_per_slice)
+        fleet = build(executor)
+        t0 = time.perf_counter()
+        res = fleet.run(max_rounds=1200)
+        dt = time.perf_counter() - t0
+        results[executor] = int(res.steps.sum()) / dt
+        if executor == "trace":
+            # The timed fleet hits the warm fleet's shared trace cache
+            # for the hot entries (late preemption points still record),
+            # so the workload's one-time record/compile cost is the sum
+            # of both fleets' deltas; guards and specialized fraction
+            # come from the timed run alone.
+            warm_stats = warm.trace_stats()
+            stats = fleet.trace_stats()
+            rounds = res.rounds
+    METRICS["vm_fleet64_trace"] = {
+        "nodes": n,
+        "steps_per_s": results["trace"],
+        "generic_steps_per_s": results["batched"],
+        "network_steps_per_s": network_steps_per_s,
+        "specialized_frac": stats["specialized_frac"],
+        "guard_exits": stats["guard_exits"],
+        "traces_recorded": warm_stats["traces_recorded"]
+        + stats["traces_recorded"],
+        "traces_compiled": warm_stats["traces_compiled"]
+        + stats["traces_compiled"],
+        "rounds": rounds,
+    }
+    stats = dict(
+        stats,
+        traces_recorded=METRICS["vm_fleet64_trace"]["traces_recorded"],
+        traces_compiled=METRICS["vm_fleet64_trace"]["traces_compiled"],
+    )
+    return results["trace"], results["batched"], stats
+
+
 def bench_fleet_io(n: int = 8, n_suspended: int = 2) -> tuple[int, int]:
     """The partial-IO win: ``n_suspended`` of ``n`` nodes block on a FIOS
     call while the rest compute.  Returns IO-service bytes for the
@@ -268,6 +330,13 @@ def run() -> list[tuple[str, float, str]]:
                  f"{pk_steps - pk_stats['kernel_steps']} lax-tail steps / "
                  f"{pk_stats['bailed_node_rounds']} bail-outs) vs "
                  f"{f_sps:.0f} steps/s lax interpreter fleet"))
+    t_sps, g_sps, t_stats = bench_fleet_trace(64, network_steps_per_s=f_sps)
+    rows.append(("vm_fleet64_trace", 1e6 / t_sps,
+                 f"{t_sps:.0f} steps/s trace-specialized hot 64-node fleet "
+                 f"vs {g_sps:.0f} steps/s generic vmapped interpreter on the "
+                 f"same workload ({t_stats['specialized_frac']:.1%} "
+                 f"specialized, {t_stats['guard_exits']} guard exits, "
+                 f"{t_stats['traces_compiled']} traces compiled)"))
     p_bytes, fs_bytes = bench_fleet_io(8, 2)
     rows.append(("vm_fleet_io_partial", float(p_bytes),
                  f"{p_bytes} B partial-state IO service vs {fs_bytes} B "

@@ -20,6 +20,7 @@ from repro.core.vm.executor import (
     PallasSliceExecutor,
     make_executor,
 )
+from repro.core.vm.trace import TraceJitExecutor
 from repro.core.vm.machine import REXAVM, RunResult
 from repro.core.vm.fleet import FleetKernels, FleetResult, FleetVM, get_fleet_kernels, reference_round
 from repro.core.vm.ensemble import EnsembleVM, replicate_state
@@ -32,7 +33,7 @@ __all__ = [
     "FiosRegistry", "DiosRegistry", "FleetIOService", "HostLink", "build_router",
     "Interpreter", "Oracle", "REXAVM", "RunResult",
     "Executor", "BatchedSliceExecutor", "JitExecutor", "OracleExecutor",
-    "PallasSliceExecutor", "make_executor",
+    "PallasSliceExecutor", "TraceJitExecutor", "make_executor",
     "FleetKernels", "FleetResult", "FleetVM", "get_fleet_kernels", "reference_round",
     "EnsembleVM", "replicate_state", "vmstate",
 ]

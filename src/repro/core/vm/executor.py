@@ -21,10 +21,17 @@ given:
                               (``repro.kernels.vmloop``) with a lax-
                               interpreter tail for instructions outside the
                               kernel's claimed opcode set — the closest
-                              analogue of the paper's FPGA backend.
+                              analogue of the paper's FPGA backend;
+  * :class:`~repro.core.vm.trace.TraceJitExecutor`
+                            — the trace-JIT engine (``backend="trace"``):
+                              nodes grouped by program hash, hot paths
+                              recorded once by the Oracle and compiled to
+                              guarded straight-line XLA, deoptimizing into
+                              the generic interpreter tail — the closest
+                              analogue of the paper's integrated JIT.
 
 All produce byte-identical states (tests/test_vm_equivalence.py,
-tests/test_vm_pallas.py).
+tests/test_vm_pallas.py, tests/test_vm_trace.py).
 """
 
 from __future__ import annotations
@@ -283,6 +290,11 @@ class OracleExecutor:
         return state
 
 
+# Frontend-selectable single-VM backends (REXAVM(backend=...)); the fleet
+# additionally accepts "batched" for its default vmapped engine.
+VM_BACKENDS = ("jit", "oracle", "pallas", "trace")
+
+
 def make_executor(backend: str, cfg: VMConfig, isa: ISA | None = None) -> Executor:
     if backend == "jit":
         return JitExecutor(cfg, isa)
@@ -290,4 +302,10 @@ def make_executor(backend: str, cfg: VMConfig, isa: ISA | None = None) -> Execut
         return OracleExecutor(cfg, isa)
     if backend == "pallas":
         return PallasSliceExecutor(cfg, isa)
-    raise ValueError(f"unknown VM backend {backend!r}")
+    if backend == "trace":
+        from repro.core.vm.trace import TraceJitExecutor
+        return TraceJitExecutor(cfg, isa)
+    raise ValueError(
+        f"unknown VM backend {backend!r}: valid backends are "
+        + ", ".join(repr(b) for b in VM_BACKENDS)
+    )

@@ -116,8 +116,14 @@ class FleetKernels:
         elif executor == "batched":
             from repro.core.vm.executor import BatchedSliceExecutor
             self.executor = BatchedSliceExecutor(cfg, isa)
+        elif executor == "trace":
+            from repro.core.vm.trace import TraceJitExecutor
+            self.executor = TraceJitExecutor(cfg, isa, mesh=mesh)
         else:
-            raise ValueError(f"unknown fleet executor {executor!r}")
+            raise ValueError(
+                f"unknown fleet executor {executor!r}: valid executors are "
+                "'batched', 'pallas', 'trace'"
+            )
         self.interp = self.executor.interp
         self._build()
 
@@ -164,6 +170,24 @@ class FleetKernels:
                 & (wake > S.now)
             )
             return constrain(S._replace(now=jnp.where(warp, wake, S.now)))
+
+        if getattr(self.executor, "host_driven", False):
+            # Trace-JIT engine: the slice itself is host-orchestrated (a
+            # per-slice probe groups nodes by program and applies compiled
+            # traces), so the round cannot be one jitted function.  The
+            # post-slice layers (clock, routing, warp) stay jitted; the
+            # sharding constraint lives inside them, where it is legal.
+            executor = self.executor
+            post = jax.jit(post_slice)
+
+            def fleet_round_host(S: VMState, steps: int):
+                steps0 = S.steps
+                S, _ = executor.run_slice_batched(S, steps)
+                return post(S, steps0)
+
+            self.round = fleet_round_host
+            self.round_aux = None
+            return
 
         def fleet_round(S: VMState, steps: int):
             S = constrain(S)
@@ -246,10 +270,12 @@ class FleetVM:
     count just the IO-service share.
 
     ``executor`` selects the per-node slice engine: ``"batched"`` (vmapped
-    lax interpreter, the default) or ``"pallas"`` (the on-chip
+    lax interpreter, the default), ``"pallas"`` (the on-chip
     ``kernels/vmloop`` fetch/dispatch/stack kernel; unclaimed opcodes bail
-    to a lax tail — see ``pallas_stats()``).  Both are byte-exact vs
-    ``reference_round``.
+    to a lax tail — see ``pallas_stats()``), or ``"trace"`` (the trace-JIT
+    engine: nodes grouped by program hash, hot paths compiled to guarded
+    straight-line XLA, guard failures deoptimize into the generic tail —
+    see ``trace_stats()``).  All are byte-exact vs ``reference_round``.
     """
 
     def __init__(
@@ -316,6 +342,13 @@ class FleetVM:
         # round loop stays async; see pallas_stats()).
         self._kernel_steps_acc = 0         # instrs retired inside the kernel
         self._bailed_acc = 0               # node-rounds that hit a bail-out
+        # Trace-executor telemetry: the engine's counters are monotonic and
+        # shared (kernels are lru-cached), so remember this fleet's baseline
+        # and report deltas (see trace_stats()).
+        self._trace0 = (
+            self.kernels.executor.stats() if executor == "trace" else None
+        )
+        self._trace_steps_total = 0        # instrs executed across run()s
 
     @classmethod
     def from_nodes(cls, nodes: list[REXAVM], **kw) -> "FleetVM":
@@ -342,6 +375,28 @@ class FleetVM:
             "executor": self.executor_kind,
             "kernel_steps": int(self._kernel_steps_acc),
             "bailed_node_rounds": int(self._bailed_acc),
+        }
+
+    def trace_stats(self) -> dict:
+        """Trace-executor telemetry (zeros under other executors): traces
+        recorded/compiled, guard exits (deopts into the generic tail), and
+        the fraction of executed instructions that ran specialized —
+        counted since this fleet was created, across its run()s."""
+        if self._trace0 is None:
+            return {"executor": self.executor_kind}
+        now = self.kernels.executor.stats()
+        base = self._trace0
+        spec = now["spec_steps"] - base["spec_steps"]
+        total = self._trace_steps_total
+        return {
+            "executor": self.executor_kind,
+            "traces_recorded": now["traces_recorded"] - base["traces_recorded"],
+            "traces_compiled": now["traces_compiled"] - base["traces_compiled"],
+            "spec_steps": spec,
+            "guard_exits": now["guard_exits"] - base["guard_exits"],
+            "total_steps": total,
+            "specialized_frac": spec / total if total else 0.0,
+            "groups": now["groups"],
         }
 
     def transfer_stats(self) -> dict:
@@ -374,6 +429,16 @@ class FleetVM:
             self._S = VMState(*[jnp.asarray(x) for x in stacked])
         self.h2d += 1
         self.h2d_bytes += vms.state_nbytes(stacked)
+        if self.executor_kind == "trace":
+            # Refresh the green keys: push()/start() is exactly when host-
+            # side recompiles or incremental code loads land, and a changed
+            # code segment must re-key (content hash) its trace-cache
+            # entries.  Stale keys would still be byte-safe (per-step CS
+            # guards), just slower.
+            from repro.core.vm.trace import program_key
+            self.kernels.executor.set_program_keys(
+                [program_key(vm.state.cs) for vm in self.nodes]
+            )
 
     def sync(self) -> None:
         """Pull the stacked state back into the per-node host frontends."""
@@ -482,6 +547,7 @@ class FleetVM:
             last_steps_sum = steps_sum
         self.sync()
         executed = np.asarray(self._S.steps) - steps0
+        self._trace_steps_total += int(executed.sum())
         # Host frontends are canonical again; a later run() restacks them.
         self._S = None
         task0 = np.asarray([int(vm.state.tstatus[0]) for vm in self.nodes])

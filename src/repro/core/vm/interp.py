@@ -902,6 +902,37 @@ class Interpreter:
                 return lax.switch(code, branches, s)
             return lax.cond(bad, lambda s: raise_exc(s, EXC_STACK), good, st)
 
+        # Exception dispatch (paper §3.8): align RS to the catch point,
+        # push the catch point as the return address, enter the handler.
+        # Shared by the generic step and the trace-specialized steps.
+        def dispatch_exc(s):
+            t2 = s.cur
+            code = jnp.clip(s.pending_exc[t2], 0, NUM_EXC - 1)
+            handler = s.handlers[code]
+            has = handler > 0
+            def with_handler(x):
+                crsp = jnp.clip(x.catch_rsp[t2], 0, RS - 1)
+                x = x._replace(
+                    rs=x.rs.at[t2, crsp].set(x.catch_pc[t2]),
+                    rsp=x.rsp.at[t2].set(crsp + 1),
+                    last_exc=x.last_exc.at[t2].set(code),
+                    pending_exc=x.pending_exc.at[t2].set(0),
+                )
+                return set_pc(x, handler)
+            def no_handler(x):
+                x = x._replace(
+                    last_exc=x.last_exc.at[t2].set(code),
+                    pending_exc=x.pending_exc.at[t2].set(0),
+                )
+                return set_status(x, ST_ERR)
+            return lax.cond(has, with_handler, no_handler, s)
+
+        def finish_instr(st):
+            """Shared per-instruction tail: step count + exception dispatch."""
+            st = st._replace(steps=st.steps + 1)
+            exc = st.pending_exc[st.cur]
+            return lax.cond(exc > 0, dispatch_exc, lambda s: s, st)
+
         def step_instr(st: VMState) -> VMState:
             t = st.cur
             pc = st.pc[t]
@@ -940,36 +971,87 @@ class Interpreter:
                 lambda s: set_status(raise_exc(s, EXC_TRAP), ST_ERR),
                 st,
             )
-            st = st._replace(steps=st.steps + 1)
-
-            # Exception dispatch (paper §3.8): align RS to the catch point,
-            # push the catch point as the return address, enter the handler.
-            exc = st.pending_exc[st.cur]
-            def dispatch(s):
-                t2 = s.cur
-                code = jnp.clip(s.pending_exc[t2], 0, NUM_EXC - 1)
-                handler = s.handlers[code]
-                has = handler > 0
-                def with_handler(x):
-                    crsp = jnp.clip(x.catch_rsp[t2], 0, RS - 1)
-                    x = x._replace(
-                        rs=x.rs.at[t2, crsp].set(x.catch_pc[t2]),
-                        rsp=x.rsp.at[t2].set(crsp + 1),
-                        last_exc=x.last_exc.at[t2].set(code),
-                        pending_exc=x.pending_exc.at[t2].set(0),
-                    )
-                    return set_pc(x, handler)
-                def no_handler(x):
-                    x = x._replace(
-                        last_exc=x.last_exc.at[t2].set(code),
-                        pending_exc=x.pending_exc.at[t2].set(0),
-                    )
-                    return set_status(x, ST_ERR)
-                return lax.cond(has, with_handler, no_handler, s)
-            st = lax.cond(exc > 0, dispatch, lambda s: s, st)
-            return st
+            return finish_instr(st)
 
         self._step_instr = step_instr
+
+        # -- trace-specialized steps (PyPy-style greens; core/vm/trace.py) ----
+        #
+        # ``make_static_step(tag, code)`` compiles ONE instruction's
+        # semantics with the tag and (for TAG_OP) the dispatch-table branch
+        # chosen at build time — the ``lax.switch`` over the whole branch
+        # table disappears, only the op body and its data-dependent conds
+        # remain.  The instruction *cell* stays a traced operand so literal
+        # payloads and call targets do not fragment the trace-fn cache: a
+        # whole program family ("lit lit + halt" for any literals) shares
+        # one compiled function.  The caller guarantees pc validity by
+        # guarding ``pc == recorded_pc`` and ``cs[pc] == recorded_cell``
+        # (recorded pcs passed bounds-checked fetch), so the generic step's
+        # pc_ok cond is statically true here.  Everything else — stack
+        # pre-check, raise/dispatch, step counting — is byte-identical to
+        # ``step_instr``.
+
+        def make_static_step(tag: int, code: int):
+            tag = int(tag)
+
+            if tag == TAG_OP:
+                code = min(max(int(code), 0), num_ops)
+                body = branches[code]
+                din, dout = needs_din[code], needs_dout[code]
+                fin, fout = needs_fin[code], needs_fout[code]
+
+                def step(st, instr):
+                    t = st.cur
+                    st = set_pc(st, st.pc[t] + 1)
+                    under = (st.dsp[t] < din) | (st.fsp[t] < fin)
+                    over = (st.dsp[t] - din + dout > DS) | (
+                        st.fsp[t] - fin + fout > FS
+                    )
+                    bad = under | over
+                    st = lax.cond(
+                        bad, lambda s: raise_exc(s, EXC_STACK), body, st
+                    )
+                    return finish_instr(st)
+
+            elif tag == TAG_LIT:
+                def step(st, instr):
+                    t = st.cur
+                    payload = (instr >> 2).astype(I32)
+                    st = set_pc(st, st.pc[t] + 1)
+                    over = st.dsp[t] >= DS
+                    st = lax.cond(
+                        over,
+                        lambda x: raise_exc(x, EXC_STACK),
+                        lambda x: dpush(x, payload),
+                        st,
+                    )
+                    return finish_instr(st)
+
+            elif tag == TAG_CALL:
+                def step(st, instr):
+                    t = st.cur
+                    pc = st.pc[t]
+                    payload = (instr >> 2).astype(I32)
+                    over = st.rsp[t] >= RS
+                    def do(x):
+                        x = x._replace(
+                            rs=x.rs.at[t, jnp.clip(x.rsp[t], 0, RS - 1)].set(pc + 1),
+                            rsp=x.rsp.at[t].add(1),
+                        )
+                        return set_pc(x, payload)
+                    st = lax.cond(
+                        over, lambda x: raise_exc(x, EXC_STACK), do, st
+                    )
+                    return finish_instr(st)
+
+            else:  # TAG_RESERVED
+                def step(st, instr):
+                    st = raise_exc(set_pc(st, st.pc[st.cur] + 1), EXC_TRAP)
+                    return finish_instr(st)
+
+            return step
+
+        self.make_static_step = make_static_step
 
         def vmloop(st: VMState, steps: int) -> VMState:
             """Alg. 1: run at most ``steps`` instructions of the current task."""

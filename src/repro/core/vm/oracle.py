@@ -76,6 +76,10 @@ class Oracle:
             nm = self.isa.name[code]
             self._needs[code] = STACK_NEEDS.get(nm, (0, 0, 0, 0))
         self._ops = self._build_ops()
+        # Optional tracer callback ``hook(pc, instr)`` invoked after every
+        # successful in-bounds fetch, before the instruction executes; lets
+        # core/vm/trace.py use this reference interpreter as its recorder.
+        self.trace_hook = None
 
     # -- helpers operating on numpy state -------------------------------------
 
@@ -686,6 +690,8 @@ class Oracle:
             self._dispatch_exc(st)
             return
         instr = int(st.cs[pc])
+        if self.trace_hook is not None:
+            self.trace_hook(pc, instr)
         tag = instr & 3
         payload = instr >> 2  # arithmetic shift (numpy int32 -> python int)
 

@@ -1,0 +1,442 @@
+"""Trace-JIT slice engine — program-specialized, dispatch-free executors.
+
+The paper's REXAVM gets its speed from compiling text code to Bytecode
+*once* and then executing without re-deciding anything per step (§2, the
+"integrated, highly efficient just-in-time compiler").  The generic
+:class:`~repro.core.vm.executor.BatchedSliceExecutor` still pays the full
+``lax.switch`` dispatch tax per lane per step; at fleet scale, however,
+thousands of nodes run only a handful of distinct active-message programs.
+This module removes the per-step dispatch for exactly that case, the same
+move PyPy-style meta-tracers make: the *bytecode* is green (constant per
+program), the *data* is red.
+
+Pipeline, per micro-slice:
+
+  1. ``schedule`` runs vmapped on device (identical to the generic path);
+  2. a cheap host probe groups the woken nodes by ``(program hash,
+     entry pc)`` — bytecode + dispatch tables are the green keys;
+  3. per group, the reference :class:`~repro.core.vm.oracle.Oracle` runs
+     ONCE as a host-side recorder over a copy of one representative node,
+     logging the concrete ``(pc, instruction-cell)`` sequence it fetches
+     (``Oracle.trace_hook``);
+  4. the recorded trace is compiled to a specialized XLA function whose
+     dispatch is narrowed to the trace's own instruction kinds: one
+     :meth:`Interpreter.make_static_step` per *distinct* ``(tag, opcode)``
+     the path touches — tag and branch-table entry chosen at build time,
+     so the interpreter's full ``lax.switch`` over every opcode collapses
+     to a handful of static steps — with every step guarded on
+     ``pc == recorded_pc`` and ``cs[pc] == recorded_cell``; a path that
+     closed a loop wraps back to its recorded re-entry point, so one short
+     recording specializes arbitrarily many iterations;
+  5. a failed guard (conditional jump taken differently, ``receive``
+     finding a message, self-modified code, IO suspension) *deoptimizes*:
+     the node simply stops consuming the trace and the shared generic tail
+     (the lax interpreter's vmloop + preempt) finishes its slice budget.
+
+Because each specialized step is byte-identical to ``step_instr`` under a
+true guard and the generic tail is the interpreter itself, the composition
+is byte-exact vs ``reference_round``/Oracle regardless of how traces are
+recorded, shared or stale — the guards, not the cache, carry correctness
+(tests/test_vm_trace.py).
+
+Compiled trace functions are *shape-keyed*: the compile key is the sorted
+set of distinct ``(tag, opcode)`` kinds on the path, while the concrete
+pcs, instruction cells, per-step kind indices, length, loop point and
+slice budget are all passed as traced operands.  Programs that differ
+only in literal values, call targets, entry pcs or path lengths therefore
+share one XLA compilation, and a whole single-program fleet is served by
+a single function (the full-fleet fast path skips the gather/scatter
+entirely).
+
+Engines are cached per ``VMConfig`` like ``interp_for``; the trace cache
+is keyed by program *content hash*, so recompiling or incrementally
+loading code into a node naturally invalidates its entry (a new key) —
+and even a stale hit only costs a guard exit, never wrong bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+
+import numpy as np
+
+from repro.config import VMConfig
+from repro.core.vm.spec import ISA, ST_RUN, ST_YIELD, TAG_OP, get_isa
+from repro.core.vm import vmstate as vms
+from repro.core.vm.vmstate import VMState
+
+# Traces are bounded: a slice asking for more steps than this records this
+# many and lets the generic tail run the remainder.  Big enough to cover a
+# whole default micro-slice (steps_per_slice=256) stays byte-exact either
+# way; 128 keeps the unrolled XLA programs small.
+TRACE_MAX = 128
+
+
+def program_key(cs) -> str:
+    """Green key of a node's program: content hash of its code segment
+    (bytecode + compiled dispatch are both CS-resident)."""
+    data = np.ascontiguousarray(np.asarray(cs)).tobytes()
+    return hashlib.blake2b(data, digest_size=8).hexdigest()
+
+
+class _Trace:
+    """One recorded hot path: the concrete fetch sequence of a program
+    from one entry pc.
+
+    ``kinds`` maps each trace position to an index into the *trace-local
+    dispatch table* — the sorted set of distinct ``(tag, opcode)`` pairs
+    the path touches (``branch_set``, the compile key).  ``loop_start``
+    is the position the path re-enters when its last fetch revisited an
+    earlier pc (a closed loop); the compiled function wraps back there,
+    so a hot loop specializes an arbitrary number of iterations from one
+    short recording.  Arrays are padded to ``TRACE_MAX`` (the runtime
+    never indexes past ``length``) so every trace of one ``branch_set``
+    shares a single XLA compilation."""
+
+    __slots__ = ("pcs", "instrs", "kinds", "length", "loop_start", "branch_set")
+
+    def __init__(self, rec: list[tuple[int, int]], num_ops: int, loop_start: int):
+        kinds_raw = []
+        for _, instr in rec:
+            tag = instr & 3
+            code = min(max(instr >> 2, 0), num_ops) if tag == TAG_OP else -1
+            kinds_raw.append((tag, code))
+        self.branch_set = tuple(sorted(set(kinds_raw)))
+        index = {kc: i for i, kc in enumerate(self.branch_set)}
+        self.length = len(rec)
+        self.loop_start = loop_start
+
+        def pad(xs, fill):
+            return np.asarray(
+                list(xs) + [fill] * (TRACE_MAX - len(xs)), np.int32
+            )
+
+        self.pcs = pad([pc for pc, _ in rec], -1)
+        self.instrs = pad([instr for _, instr in rec], 0)
+        self.kinds = pad([index[kc] for kc in kinds_raw], 0)
+
+    def __len__(self):
+        return self.length
+
+
+def _build_trace_fn(interp, cfg: VMConfig, branch_set):
+    """Compile one trace family: a guarded while-loop whose dispatch is
+    narrowed to the trace's own ``branch_set`` — a handful of static
+    steps instead of the interpreter's full branch table.
+
+    The concrete path (``pcs``/``instrs``/``kinds``/``length``/
+    ``loop_start``) and the slice budget are *traced* operands, so every
+    trace touching the same instruction kinds — any entry pc, any
+    literals, any length — reuses this one compilation.
+
+    Returns ``fn(S, pcs, instrs, kinds, length, loop_start, budget) ->
+    (S, n_spec, guard_exit)`` where ``n_spec`` counts specialized steps
+    retired per node and ``guard_exit`` flags nodes that left the trace
+    while still runnable with budget to spare (a deopt into the generic
+    tail)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    fns = [interp.make_static_step(tag, code) for tag, code in branch_set]
+    CS = cfg.cs_size
+
+    def run_one(st: VMState, pcs, instrs, kinds, length, loop_start, budget):
+        alive0 = st.tstatus[st.cur] == ST_RUN
+
+        def cond(carry):
+            st, n, k, alive = carry
+            return alive & (n < budget)
+
+        def body(carry):
+            st, n, k, alive = carry
+            pc_k = pcs[k]
+            instr_k = instrs[k]
+            # Guard: the node is on the recorded path AND the cell still
+            # holds the recorded instruction (self-modifying code deopts).
+            ok = (
+                alive
+                & (st.pc[st.cur] == pc_k)
+                & (st.cs[jnp.clip(pc_k, 0, CS - 1)] == instr_k)
+            )
+            nxt = lax.switch(kinds[k], fns, st, instr_k)
+            st = jax.tree.map(lambda a, b: jnp.where(ok, a, b), nxt, st)
+            n = n + ok.astype(jnp.int32)
+            # Past the end, re-enter at the recorded loop point; for a
+            # non-cyclic path the wrapped guard simply fails.
+            k = jnp.where(k + 1 >= length, loop_start, k + 1)
+            alive = ok & (st.tstatus[st.cur] == ST_RUN)
+            return st, n, k, alive
+
+        st, n, _, _ = lax.while_loop(
+            cond, body, (st, jnp.int32(0), jnp.int32(0), alive0)
+        )
+        guard_exit = (n < budget) & (st.tstatus[st.cur] == ST_RUN)
+        return st, n, guard_exit
+
+    return jax.jit(
+        jax.vmap(run_one, in_axes=(0, None, None, None, None, None, None))
+    )
+
+
+class _TraceEngine:
+    """Shared per-(cfg, ISA) machinery: the jitted schedule / generic
+    tail, the recorder Oracle, and the two-level cache (content-keyed
+    traces -> shape-keyed compiled functions).  Counters are monotonic;
+    frontends report deltas (``FleetVM.trace_stats()``)."""
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        from repro.core.vm.interp import interp_for
+        from repro.core.vm.oracle import Oracle
+
+        self.cfg = cfg
+        self.isa = isa or get_isa()
+        self.interp = interp_for(cfg, isa)
+        self._recorder = Oracle(cfg, isa)
+        self.schedule_b = jax.jit(jax.vmap(self.interp._schedule))
+
+        step_instr = self.interp._step_instr
+
+        def finish_one(st: VMState, remaining):
+            # Generic tail: the lax interpreter's vmloop with a *traced*
+            # step bound (the slice budget minus the specialized steps),
+            # then the standard preempt.  A no-op for nodes that halted,
+            # suspended, or were never scheduled.
+            def cond(carry):
+                s, n = carry
+                return (n < remaining) & (s.tstatus[s.cur] == ST_RUN)
+
+            def body(carry):
+                s, n = carry
+                return step_instr(s), n + 1
+
+            st, _ = lax.while_loop(cond, body, (st, jnp.int32(0)))
+            still = st.tstatus[st.cur] == ST_RUN
+            return lax.cond(
+                still,
+                lambda s: s._replace(tstatus=s.tstatus.at[s.cur].set(ST_YIELD)),
+                lambda s: s,
+                st,
+            )
+
+        self.finish_b = jax.jit(jax.vmap(finish_one))
+
+        self.traces: dict = {}   # (prog_key, entry_pc, cap) -> _Trace
+        self.fns: dict = {}      # shape tuple -> compiled trace fn
+        self.traces_recorded = 0
+        self.traces_compiled = 0
+        # Lazy device-side accumulators (no sync until stats()).
+        self.spec_steps_acc = 0
+        self.guard_exits_acc = 0
+        # Per-program-group telemetry for the serve monitor
+        # (prog_key -> {"slices", "node_slices"}).
+        self.group_stats: dict = {}
+
+    # -- recording -----------------------------------------------------------
+
+    def _record(self, st_host: VMState, cap: int) -> _Trace:
+        """Run the Oracle over a host copy of one post-schedule node,
+        logging every fetched (pc, cell) pair.  Recording stops at the
+        first *revisited* pc — the path has closed a loop; the revisit
+        position becomes the trace's ``loop_start`` so the compiled
+        function repeats the cycle instead of storing it unrolled."""
+        rec: list[tuple[int, int]] = []
+        seen: dict[int, int] = {}
+        loop_start = 0
+
+        class _StopTrace(Exception):
+            pass
+
+        def hook(pc, instr):
+            nonlocal loop_start
+            if pc in seen:
+                loop_start = seen[pc]
+                raise _StopTrace
+            seen[pc] = len(rec)
+            rec.append((pc, instr))
+
+        oracle = self._recorder
+        oracle.trace_hook = hook
+        try:
+            oracle.vmloop(st_host, cap)
+        except _StopTrace:
+            pass
+        except Exception:
+            # The Oracle refuses degenerate encodings the lax interpreter
+            # clips (e.g. negative opcode payloads); keep the prefix it
+            # executed cleanly and let the generic tail handle the rest.
+            rec = rec[:-1]
+        finally:
+            oracle.trace_hook = None
+        self.traces_recorded += 1
+        return _Trace(rec, self.isa.num_ops, loop_start)
+
+    def get_trace(self, prog_key, entry_pc: int, cap: int, st_host_fn) -> _Trace:
+        key = (prog_key, entry_pc, cap)
+        tr = self.traces.get(key)
+        if tr is None:
+            tr = self._record(st_host_fn(), cap)
+            self.traces[key] = tr
+        return tr
+
+    def fn_for(self, branch_set):
+        fn = self.fns.get(branch_set)
+        if fn is None:
+            fn = _build_trace_fn(self.interp, self.cfg, branch_set)
+            self.fns[branch_set] = fn
+            self.traces_compiled += 1
+        return fn
+
+    def note_group(self, prog_key, n_nodes: int) -> None:
+        g = self.group_stats.setdefault(
+            prog_key, {"slices": 0, "node_slices": 0}
+        )
+        g["slices"] += 1
+        g["node_slices"] += n_nodes
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_trace_engine(cfg: VMConfig) -> _TraceEngine:
+    return _TraceEngine(cfg, None)
+
+
+def get_trace_engine(cfg: VMConfig, isa: ISA | None = None) -> _TraceEngine:
+    """Engine-selection policy mirroring ``interp_for``: cached for the
+    default ISA, fresh build for a custom one."""
+    if isa is None or isa is get_isa():
+        return _cached_trace_engine(cfg)
+    return _TraceEngine(cfg, isa)
+
+
+class TraceJitExecutor:
+    """Program-specialized slice engine — the fleet's fourth backend.
+
+    Host-driven (``host_driven = True``): unlike the fully-jitted batched
+    engines, each slice makes one small device->host probe (cur/pc/status)
+    to group nodes by program, then applies per-group compiled traces and
+    one shared generic finish.  Device state stays resident throughout —
+    the probe moves a few hundred bytes, not the fleet.
+
+    The single-node :class:`~repro.core.vm.executor.Executor` protocol
+    (``run_slice`` over the host-canonical numpy state) is provided for
+    ``REXAVM(backend="trace")`` and the ISA coverage sweep; it hashes the
+    node's code segment per call, so incremental code loads re-key
+    naturally, and counts transfers like ``JitExecutor``.
+    """
+
+    backend = "trace"
+    host_driven = True
+
+    def __init__(self, cfg: VMConfig, isa: ISA | None = None, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.engine = get_trace_engine(cfg, isa)
+        self.interp = self.engine.interp
+        self._prog_keys: list | None = None
+        self.h2d = 0
+        self.d2h = 0
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.probes = 0            # per-slice scheduler probes
+
+    # -- program identity ----------------------------------------------------
+
+    def set_program_keys(self, keys: list) -> None:
+        """Install the fleet's per-node green keys (one per node, in node
+        order).  Stale or colliding keys are safe — every specialized step
+        re-checks the actual CS cell — they only cost deopts."""
+        self._prog_keys = list(keys)
+
+    # -- batched slice (device state in / device state out) -------------------
+
+    def run_slice_batched(self, S: VMState, steps: int):
+        import jax
+        import jax.numpy as jnp
+
+        eng = self.engine
+        S, found = eng.schedule_b(S)
+        N = int(S.cur.shape[0])
+        cur, pc, tstatus = jax.device_get((S.cur, S.pc, S.tstatus))
+        self.probes += 1
+        keys = self._prog_keys
+        if keys is None or len(keys) != N:
+            # No green keys installed: fall back to per-node identity.
+            # Still correct (each node records its own trace), just no
+            # cross-node sharing.
+            keys = list(range(N))
+
+        groups: dict = {}
+        for i in range(N):
+            c = int(cur[i])
+            if int(tstatus[i, c]) != ST_RUN:
+                continue
+            groups.setdefault((keys[i], int(pc[i, c])), []).append(i)
+
+        cap = min(int(steps), TRACE_MAX)
+        ns = jnp.zeros(N, jnp.int32)
+        for (pkey, entry), idx in groups.items():
+            def rep_state(idx=idx):
+                sub = vms.to_numpy(vms.take_nodes(S, np.asarray([idx[0]])))
+                # np.array keeps 0-d fields as mutable 0-d arrays, not
+                # scalars (the Oracle mutates them in place).
+                return VMState(*[np.array(x[0]) for x in sub])
+
+            tr = eng.get_trace(pkey, entry, cap, rep_state)
+            eng.note_group(pkey, len(idx))
+            if len(tr) == 0:
+                continue
+            fn = eng.fn_for(tr.branch_set)
+            args = (tr.pcs, tr.instrs, tr.kinds, tr.length, tr.loop_start, int(steps))
+            if len(idx) == N:
+                # Single-program fleet: run the trace over the whole
+                # stacked state — no gather/scatter, sharding untouched.
+                S, n_sub, guards = fn(S, *args)
+                ns = n_sub
+            else:
+                ia = np.asarray(idx, np.int32)
+                sub = vms.take_nodes(S, ia)
+                sub, n_sub, guards = fn(sub, *args)
+                S = vms.put_nodes(S, ia, sub)
+                ns = ns.at[ia].set(n_sub)
+            eng.spec_steps_acc = eng.spec_steps_acc + n_sub.sum()
+            eng.guard_exits_acc = eng.guard_exits_acc + guards.sum()
+
+        S = eng.finish_b(S, steps - ns)
+        return S, found
+
+    # -- single-node Executor protocol ----------------------------------------
+
+    def run_slice(self, state: VMState, steps: int) -> VMState:
+        nbytes = vms.state_nbytes(state)
+        keys0 = self._prog_keys
+        self._prog_keys = [program_key(state.cs)]
+        stacked = VMState(*[vms.stack1(x) for x in state])
+        self.h2d += 1
+        self.h2d_bytes += nbytes
+        try:
+            out, _ = self.run_slice_batched(stacked, steps)
+        finally:
+            self._prog_keys = keys0
+        host = VMState(*[np.array(x[0]) for x in out])
+        self.d2h += 1
+        self.d2h_bytes += nbytes
+        return host
+
+    # -- telemetry -------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Monotonic engine counters (forces a device sync on the lazy
+        accumulators).  Frontends report per-run deltas."""
+        eng = self.engine
+        return {
+            "traces_recorded": eng.traces_recorded,
+            "traces_compiled": eng.traces_compiled,
+            "spec_steps": int(eng.spec_steps_acc),
+            "guard_exits": int(eng.guard_exits_acc),
+            "groups": {k: dict(v) for k, v in eng.group_stats.items()},
+        }

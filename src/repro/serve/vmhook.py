@@ -57,13 +57,17 @@ class FleetServeMonitor:
         cfg: VMConfig | None = None,
         rounds_per_step: int = 8,
         mesh=None,
+        executor: str = "batched",
     ):
         self.cfg = cfg or VMConfig()
         self.rounds_per_step = rounds_per_step
         # ``mesh`` shards the monitor fleet's node axis like any other
         # fleet; the DIOS publish + partial IO service then move only the
-        # reporting nodes' slices.
-        self.fleet = FleetVM(self.cfg, n=n, mesh=mesh)
+        # reporting nodes' slices.  ``executor`` picks the slice engine —
+        # with ``"trace"``, the monitor nodes (typically all running the
+        # same measuring job) collapse into one program group and the
+        # per-group stats land in ``trace_stats()``.
+        self.fleet = FleetVM(self.cfg, n=n, mesh=mesh, executor=executor)
         self._frames = []
         for node in self.fleet.nodes:
             node.dios_add("stats", np.zeros(self.STATS_CELLS, np.int32))
@@ -89,3 +93,10 @@ class FleetServeMonitor:
         (full syncs, partial IO-service bytes, probes) — reportable next to
         the serving stats it measures."""
         return self.fleet.transfer_stats()
+
+    def trace_stats(self) -> dict:
+        """Per-program-group trace-JIT telemetry of the monitor fleet
+        (meaningful under ``executor="trace"``): traces compiled, guard
+        exits, specialized-step fraction, and per-program-group slice
+        counts."""
+        return self.fleet.trace_stats()
