@@ -4,7 +4,10 @@ vmapped Parallel-VM ensemble (paper §3.4), the device-resident fleet
 runtime (steps/s and host<->device transfer counts vs. the seed's
 per-slice host loop), and the Pallas vmloop-kernel fleet
 (``vm_fleet64_pallas``: steps/s + in-kernel vs lax-tail step split +
-bail-out counts)."""
+bail-out counts; ``vm_fleet64_pallas_msg``: the message-bound ring through
+the fused ``rounds_aux`` fast path, rounds/s + msgs/s;
+``vm_fleet64_pallas_ann``: the vecfold/dotprod tiny-ML workload — both
+gated in CI at bailed_frac < 5%)."""
 
 from __future__ import annotations
 
@@ -186,6 +189,101 @@ def bench_fleet_pallas(n: int = 64, lax_steps_per_s: float | None = None):
     return steps / dt, stats, steps
 
 
+def bench_fleet_pallas_msg(n: int = 64, laps: int = 4, service_every: int = 8):
+    """Message-bound fast path: a token makes ``laps`` full circuits of an
+    n-node ring, every hop an in-kernel ``send``/``receive`` suspension
+    delivered by the collective router inside ``FleetKernels.rounds_aux``
+    (``run(service_every=8)`` chunks 8 whole rounds per host probe).
+    Records rounds/s, msgs/s and the in-kernel vs lax-tail step split —
+    the acceptance gate (CI) holds ``bailed_frac`` under 5%."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+
+    def prog(i: int) -> str:
+        nxt = (i + 1) % n
+        if i == 0:
+            return (f"1 {nxt} send {laps - 1} 0 do receive swap drop 1+ "
+                    f"{nxt} send loop receive swap drop drop halt")
+        return f"{laps} 0 do receive swap drop 1+ {nxt} send loop halt"
+
+    def build() -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas")
+        for i, node in enumerate(fleet.nodes):
+            node.launch(node.load(prog(i)))
+        return fleet
+
+    warm = build()
+    warm.run(max_rounds=2 * service_every, service_every=service_every)
+
+    fleet = build()
+    t0 = time.perf_counter()
+    res = fleet.run(max_rounds=16 * n, service_every=service_every)
+    dt = time.perf_counter() - t0
+    assert res.statuses == ["halt"] * n, res.statuses
+    steps = int(res.steps.sum())
+    # Every delivered message bumps exactly one mbox_wr cursor.
+    msgs = sum(int(np.asarray(vm.state.mbox_wr)) for vm in fleet.nodes)
+    stats = fleet.pallas_stats()
+    METRICS["vm_fleet64_pallas_msg"] = {
+        "nodes": n,
+        "rounds": res.rounds,
+        "rounds_per_s": res.rounds / dt,
+        "msgs": msgs,
+        "msgs_per_s": msgs / dt,
+        "steps_per_s": steps / dt,
+        "service_every": service_every,
+        "kernel_steps": stats["kernel_steps"],
+        "fallback_steps": stats["fallback_steps"],
+        "bailed_frac": stats["bailed_frac"],
+        "bailed_node_rounds": stats["bailed_node_rounds"],
+        "bail_hist": stats["bail_hist"],
+    }
+    return res.rounds / dt, msgs / dt, stats
+
+
+def bench_fleet_pallas_ann(n: int = 64):
+    """Vector/DSP regime: every node grinds a 4->4 fixed-point ANN layer
+    (``vecfold`` on the MXU path) plus a ``dotprod`` reduction per
+    iteration — the paper's tiny-ML node workload, fully claimed by the
+    kernel.  Records steps/s and the in-kernel vs lax-tail split; the CI
+    gate holds ``bailed_frac`` under 5%."""
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+    prog = (
+        "array x { 10 20 30 40 } "
+        "array w { 1 2 3 4 5 6 7 8 9 10 11 12 13 14 15 16 } "
+        "array y { 0 0 0 0 } "
+        "0 begin 1+ x w y 0 vecfold x y dotprod drop dup 200 >= until "
+        "drop halt"
+    )
+
+    def build() -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas")
+        for node in fleet.nodes:
+            node.launch(node.load(prog))
+        return fleet
+
+    warm = build()
+    warm.run(max_rounds=2)
+
+    fleet = build()
+    t0 = time.perf_counter()
+    res = fleet.run(max_rounds=120)
+    dt = time.perf_counter() - t0
+    assert res.statuses == ["halt"] * n, res.statuses
+    steps = int(res.steps.sum())
+    stats = fleet.pallas_stats()
+    METRICS["vm_fleet64_pallas_ann"] = {
+        "nodes": n,
+        "rounds": res.rounds,
+        "steps_per_s": steps / dt,
+        "kernel_steps": stats["kernel_steps"],
+        "fallback_steps": stats["fallback_steps"],
+        "bailed_frac": stats["bailed_frac"],
+        "bailed_node_rounds": stats["bailed_node_rounds"],
+        "bail_hist": stats["bail_hist"],
+    }
+    return steps / dt, stats
+
+
 def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
     """Hot single-program fleet: every node grinds the same compute loop
     (``BENCH_PROG``), the trace-JIT's best case — one program group, one
@@ -330,6 +428,19 @@ def run() -> list[tuple[str, float, str]]:
                  f"{pk_steps - pk_stats['kernel_steps']} lax-tail steps / "
                  f"{pk_stats['bailed_node_rounds']} bail-outs) vs "
                  f"{f_sps:.0f} steps/s lax interpreter fleet"))
+    m_rps, m_mps, m_stats = bench_fleet_pallas_msg(64)
+    mm = METRICS["vm_fleet64_pallas_msg"]
+    rows.append(("vm_fleet64_pallas_msg", 1.0 / m_mps,
+                 f"{m_mps:.0f} msgs/s, {m_rps:.0f} rounds/s message-bound "
+                 f"64-node ring (service_every=8 fused rounds; "
+                 f"{mm['kernel_steps']} in-kernel / {mm['fallback_steps']} "
+                 f"lax-tail steps, bailed_frac={mm['bailed_frac']:.4f})"))
+    a_sps, a_stats = bench_fleet_pallas_ann(64)
+    ma = METRICS["vm_fleet64_pallas_ann"]
+    rows.append(("vm_fleet64_pallas_ann", 1e6 / a_sps,
+                 f"{a_sps:.0f} steps/s 64-node vecfold/dotprod ANN fleet "
+                 f"({ma['kernel_steps']} in-kernel / {ma['fallback_steps']} "
+                 f"lax-tail steps, bailed_frac={ma['bailed_frac']:.4f})"))
     t_sps, g_sps, t_stats = bench_fleet_trace(64, network_steps_per_s=f_sps)
     rows.append(("vm_fleet64_trace", 1e6 / t_sps,
                  f"{t_sps:.0f} steps/s trace-specialized hot 64-node fleet "

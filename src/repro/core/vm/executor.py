@@ -128,7 +128,7 @@ class _PallasEngine(NamedTuple):
     fallback is expensive, so they are cached like ``interp_for``."""
 
     plain: Callable      # (S, steps) -> (S, found)
-    aux: Callable        # (S, steps) -> (S, found, n_exec, bailed)
+    aux: Callable        # (S, steps) -> (S, found, n_exec, bailed, bail_op)
 
 
 def _build_pallas_engine(
@@ -178,17 +178,17 @@ def _build_pallas_engine(
         # an identical intermediate state, and nodes the scheduler left
         # un-woken never satisfy the loops' ST_RUN condition.
         S, found = jax.vmap(schedule)(S)
-        S, n_exec, bailed = fleet_vmloop(
+        S, n_exec, bailed, bail_op = fleet_vmloop(
             S, steps, cfg, isa, mesh=mesh, interpret=interpret
         )
         S = jax.vmap(vmloop_rest)(S, steps - n_exec)
         S = jax.vmap(preempt)(S)
-        return S, found, n_exec, bailed
+        return S, found, n_exec, bailed, bail_op
 
     aux = jax.jit(batched_aux, static_argnames=("steps",))
 
     def batched(S: VMState, steps: int):
-        S, found, _, _ = batched_aux(S, steps)
+        S, found, _, _, _ = batched_aux(S, steps)
         return S, found
 
     plain = jax.jit(batched, static_argnames=("steps",))
@@ -254,20 +254,30 @@ class PallasSliceExecutor:
         self.kernel_steps = 0      # instructions retired inside the kernel
         self.fallback_steps = 0    # instructions retired by the lax tail
         self.bailouts = 0          # slices that hit an unclaimed opcode
+        self.bail_hist: dict[str, int] = {}   # bailing word -> bail count
+
+    def _bail_word(self, code: int) -> str:
+        isa = self.interp.isa
+        return isa.name[code] if 0 <= code < isa.num_ops else "fios/trap"
 
     def run_slice(self, state: VMState, steps: int) -> VMState:
         nbytes = vms.state_nbytes(state)
         stacked = VMState(*[vms.stack1(x) for x in state])
         self.h2d += 1
         self.h2d_bytes += nbytes
-        out, _, n_exec, bailed = self.run_slice_batched_aux(stacked, steps)
+        out, _, n_exec, bailed, bail_op = self.run_slice_batched_aux(
+            stacked, steps
+        )
         host = VMState(*[np.array(x[0]) for x in out])
         self.d2h += 1
         self.d2h_bytes += nbytes
         kernel_steps = int(np.asarray(n_exec)[0])
         self.kernel_steps += kernel_steps
         self.fallback_steps += int(host.steps) - int(state.steps) - kernel_steps
-        self.bailouts += int(np.asarray(bailed)[0])
+        if int(np.asarray(bailed)[0]):
+            self.bailouts += 1
+            word = self._bail_word(int(np.asarray(bail_op)[0]))
+            self.bail_hist[word] = self.bail_hist.get(word, 0) + 1
         return host
 
 

@@ -91,7 +91,15 @@ class FleetKernels:
     ``round``          — one full fleet round (slice, clock, routing, warp),
                          pure JAX, state in / state out, device resident
                          (``round_aux`` additionally reports the Pallas
-                         kernel's per-node step counts and bail-outs).
+                         kernel's per-node step counts, bail-outs, and the
+                         per-opcode bail histogram);
+    ``rounds_aux``     — the *message-bound round mode*: ``n_rounds`` whole
+                         rounds fused into one jitted ``lax.fori_loop``
+                         (kernel slice -> router -> warp per iteration), so
+                         a send/receive-bound fleet ping-pongs between the
+                         kernel and the collective router without the host
+                         in the loop; ``FleetVM.run(service_every=k)``
+                         drives it in chunks of ``k``.
 
     With a mesh, every layer boundary re-asserts the node-axis partition via
     the logical-rules layer, so XLA keeps per-node work shard-local and only
@@ -187,6 +195,7 @@ class FleetKernels:
 
             self.round = fleet_round_host
             self.round_aux = None
+            self.rounds_aux = None
             return
 
         def fleet_round(S: VMState, steps: int):
@@ -198,15 +207,50 @@ class FleetKernels:
         self.round = jax.jit(fleet_round, static_argnames=("steps",))
 
         if aux_slice is not None:
-            def fleet_round_aux(S: VMState, steps: int):
+            from jax import lax
+
+            nops = self.isa.num_ops
+
+            def round_body(S: VMState, steps: int):
                 S = constrain(S)
                 steps0 = S.steps
-                S, _, n_exec, bailed = aux_slice(S, steps)
-                return post_slice(S, steps0), n_exec, bailed
+                S, _, n_exec, bailed, bail_op = aux_slice(S, steps)
+                # Per-opcode bail histogram: non-bailed nodes carry
+                # bail_op == -1 and add 0 (clipped to slot 0).
+                hist = jnp.zeros(nops + 1, I32).at[
+                    jnp.clip(bail_op, 0, nops)
+                ].add(bailed.astype(I32))
+                return post_slice(S, steps0), n_exec, bailed, hist
 
-            self.round_aux = jax.jit(fleet_round_aux, static_argnames=("steps",))
+            self.round_aux = jax.jit(round_body, static_argnames=("steps",))
+
+            def fleet_rounds_aux(S: VMState, steps: int, n_rounds: int):
+                # Message-bound round mode: whole rounds — kernel slice,
+                # collective router, warp — fused into one compiled loop.
+                def body(_, carry):
+                    S, n_sum, b_sum, hist = carry
+                    S, n_exec, bailed, h = round_body(S, steps)
+                    return (
+                        S,
+                        n_sum + n_exec.sum(),
+                        b_sum + bailed.sum(),
+                        hist + h,
+                    )
+
+                init = (
+                    S,
+                    jnp.int32(0),
+                    jnp.int32(0),
+                    jnp.zeros(nops + 1, I32),
+                )
+                return lax.fori_loop(0, n_rounds, body, init)
+
+            self.rounds_aux = jax.jit(
+                fleet_rounds_aux, static_argnames=("steps", "n_rounds")
+            )
         else:
             self.round_aux = None
+            self.rounds_aux = None
 
 
 @functools.lru_cache(maxsize=8)
@@ -342,6 +386,8 @@ class FleetVM:
         # round loop stays async; see pallas_stats()).
         self._kernel_steps_acc = 0         # instrs retired inside the kernel
         self._bailed_acc = 0               # node-rounds that hit a bail-out
+        self._bail_hist_acc = 0            # (num_ops+1,) per-opcode bail counts
+        self._total_steps_acc = 0          # instrs executed across run()s
         # Trace-executor telemetry: the engine's counters are monotonic and
         # shared (kernels are lru-cached), so remember this fleet's baseline
         # and report deltas (see trace_stats()).
@@ -369,12 +415,34 @@ class FleetVM:
 
     def pallas_stats(self) -> dict:
         """Kernel-executor telemetry: instructions retired inside the
-        Pallas vmloop vs. node-rounds that bailed to the lax tail (zeros
-        under the batched executor)."""
+        Pallas vmloop vs. the lax tail (zeros under the batched executor).
+
+        ``bailed_frac`` is the fraction of executed instructions that fell
+        to the lax tail; ``bail_hist`` maps each bailing word (``task``,
+        ``rnd``, or ``fios/trap``) to how many node-rounds it bailed —
+        coverage gaps are observable, not inferred."""
+        kernel = int(self._kernel_steps_acc)
+        total = int(self._total_steps_acc)
+        fallback = max(total - kernel, 0)
+        isa = self.kernels.isa
+        hist = np.asarray(self._bail_hist_acc)
+        bail_hist: dict[str, int] = {}
+        if hist.ndim:                      # still 0 before any pallas round
+            for code in np.flatnonzero(hist):
+                word = (
+                    isa.name[int(code)]
+                    if int(code) < isa.num_ops
+                    else "fios/trap"
+                )
+                bail_hist[word] = bail_hist.get(word, 0) + int(hist[code])
         return {
             "executor": self.executor_kind,
-            "kernel_steps": int(self._kernel_steps_acc),
+            "kernel_steps": kernel,
+            "fallback_steps": fallback,
+            "total_steps": total,
+            "bailed_frac": fallback / total if total else 0.0,
             "bailed_node_rounds": int(self._bailed_acc),
+            "bail_hist": bail_hist,
         }
 
     def trace_stats(self) -> dict:
@@ -497,7 +565,11 @@ class FleetVM:
 
         ``service_every`` controls how often the host probes for pending host
         IO; with pure compute + on-device messaging the state never leaves
-        the device between ``start`` and the final ``sync``.
+        the device between ``start`` and the final ``sync``.  Under the
+        pallas executor, ``service_every > 1`` selects the message-bound
+        round mode: chunks of ``service_every`` whole rounds (kernel slice +
+        collective router + warp each) run as one compiled
+        ``FleetKernels.rounds_aux`` loop between host probes.
         """
         steps = steps or self.cfg.steps_per_slice
         if self._S is None:
@@ -507,15 +579,26 @@ class FleetVM:
         stall = 0
         last_steps_sum = -1
         round_aux = self.kernels.round_aux
+        rounds_aux = self.kernels.rounds_aux
         while rounds < max_rounds:
-            if round_aux is not None:
-                self._S, n_exec, bailed = round_aux(self._S, steps)
+            if rounds_aux is not None and service_every > 1:
+                # Message-bound round mode: probe only at chunk boundaries.
+                chunk = min(service_every, max_rounds - rounds)
+                self._S, n_sum, b_sum, hist = rounds_aux(self._S, steps, chunk)
+                self._kernel_steps_acc = self._kernel_steps_acc + n_sum
+                self._bailed_acc = self._bailed_acc + b_sum
+                self._bail_hist_acc = self._bail_hist_acc + hist
+                rounds += chunk
+            elif round_aux is not None:
+                self._S, n_exec, bailed, hist = round_aux(self._S, steps)
                 # Lazy device-side sums: no sync until pallas_stats().
                 self._kernel_steps_acc = self._kernel_steps_acc + n_exec.sum()
                 self._bailed_acc = self._bailed_acc + bailed.sum()
+                self._bail_hist_acc = self._bail_hist_acc + hist
+                rounds += 1
             else:
                 self._S = self.kernels.round(self._S, steps)
-            rounds += 1
+                rounds += 1
             if rounds % service_every != 0 and rounds < max_rounds:
                 continue
             tstatus, io_op, steps_now = self._probe()
@@ -548,6 +631,7 @@ class FleetVM:
         self.sync()
         executed = np.asarray(self._S.steps) - steps0
         self._trace_steps_total += int(executed.sum())
+        self._total_steps_acc += int(executed.sum())
         # Host frontends are canonical again; a later run() restacks them.
         self._S = None
         task0 = np.asarray([int(vm.state.tstatus[0]) for vm in self.nodes])

@@ -27,6 +27,15 @@ Semantics are byte-for-byte those of :func:`repro.core.vm.fleet.reference_round`
 (all sends in (node, task) order, then all receives; full mailbox =>
 backpressure, out-of-range destination => drop): tests/test_vm_fleet.py and
 the randomized program tests assert exact state equality.
+
+Under the Pallas executor's *message-bound round mode*
+(``FleetVM.run(service_every=k)`` with ``executor="pallas"``), this router
+runs **between kernel invocations** inside one compiled
+``FleetKernels.rounds_aux`` loop: the vmloop kernel executes each
+``send``/``receive`` suspension in-kernel (pc rewind + ``io_op`` +
+ST_IOWAIT), and the collective here delivers/resumes — so a message-bound
+ring ping-pongs kernel <-> router for ``k`` whole rounds per host probe
+without ever reaching the lax tail.
 """
 
 from __future__ import annotations

@@ -10,6 +10,29 @@ Three-file convention (see ``repro.kernels``):
   ref.py    — shared step semantics + ``vmloop_ref``, the pure-jnp oracle
               (also defines the SUPPORTED/BAILOUT opcode claim).
 
+Claimed vs declined (``ref.SUPPORTED_WORDS`` / ``ref.BAILOUT_WORDS``): the
+kernel now claims essentially the whole ISA — stack/arith/cmp/bit/mem/ctl/
+exc words, printing into the out ring, the IO-suspending words
+(``send``/``receive``/``out``/``in`` execute their suspension in-kernel;
+delivery stays with the host service and the collective router), the LUT
+fixed-point DSP scalars (VMEM table gathers), and the vector/ANN ops
+(``vecfold``/``dotprod`` contract on the MXU via ``lax.dot_general`` at
+int32; ``lowp``/``highp``/``hull`` are short on-chip IIR scans).  Only
+``task`` spawn, ``rnd``, and FIOS host calls still bail to the lax tail —
+``FleetVM.pallas_stats()`` reports the split plus a per-opcode bail
+histogram.
+
+Message-bound round mode: with ``FleetVM(executor="pallas")`` and
+``run(service_every=k)``, ``FleetKernels.rounds_aux`` fuses ``k`` whole
+rounds (kernel slice -> collective router -> warp) into one compiled loop,
+so message-bound fleets complete entire rounds without reaching the lax
+tail or the host.
+
+Pick ``executor="pallas"`` for fleets dominated by the claimed set —
+compute, messaging, DSP/ANN vector work (the paper's hardware-role
+workloads); pick ``"batched"`` for task-spawn/``rnd``/FIOS-heavy mixes,
+or ``"trace"`` for hot program-homogeneous fleets.
+
 Selected as a fleet backend via ``FleetVM(executor="pallas")`` /
 ``REXAVM(backend="pallas")``.
 """

@@ -6,6 +6,14 @@ calls inside its jitted batched slice: it extracts the kernel-visible
 :class:`~repro.kernels.vmloop.ref.CoreState` fields from the stacked fleet
 state, dispatches the Pallas kernel, and merges the mutated fields back.
 
+Message-bound round mode: ``send``/``receive`` execute their IO suspension
+*in-kernel* (pc rewind + ``io_op`` + ST_IOWAIT) and the collective router
+(``core.vm.routing``) runs between kernel invocations — ``FleetVM.run``
+with ``service_every > 1`` fuses whole (kernel slice -> route -> warp)
+rounds into one jitted ``lax.fori_loop`` (``FleetKernels.rounds_aux``), so
+a message-bound ring completes entire rounds without reaching the lax tail
+or the host.
+
 Sharding: when the fleet's node axis is mesh-partitioned (PR 2), the kernel
 must only ever see the *local shard* — a ``pl.pallas_call`` is opaque to
 XLA's SPMD partitioner, so the call is wrapped in ``shard_map`` over the
@@ -39,9 +47,10 @@ def fleet_vmloop(
     """Advance every node of a stacked fleet state by at most ``steps``
     in-kernel instructions (bailing per node on unclaimed opcodes).
 
-    Returns ``(S', n_exec (N,) int32, bailed (N,) bool)``; fields outside
-    the kernel's CoreState (out ring, mailboxes, rng, ...) pass through
-    untouched.
+    Returns ``(S', n_exec (N,) int32, bailed (N,) bool, bail_op (N,)
+    int32)``; fields outside the kernel's CoreState (mailboxes, rng, ...)
+    pass through untouched.  ``bail_op`` is -1 on non-bailed nodes, else
+    the declined opcode (``num_ops`` for FIOS/trap).
     """
     core = core_of(S)
     N = core.pc.shape[0]
@@ -55,13 +64,15 @@ def fleet_vmloop(
                 lambda c: vmloop_call(c, steps, cfg, isa, interpret=interpret),
                 mesh=mesh,
                 in_specs=(P(ax),),
-                out_specs=(P(ax), P(ax), P(ax)),
+                out_specs=(P(ax), P(ax), P(ax), P(ax)),
                 check_rep=False,
             )
-            core, n_exec, bailed = sharded(core)
-            return merge_core(S, core), n_exec, bailed
-    core, n_exec, bailed = vmloop_call(core, steps, cfg, isa, interpret=interpret)
-    return merge_core(S, core), n_exec, bailed
+            core, n_exec, bailed, bail_op = sharded(core)
+            return merge_core(S, core), n_exec, bailed, bail_op
+    core, n_exec, bailed, bail_op = vmloop_call(
+        core, steps, cfg, isa, interpret=interpret
+    )
+    return merge_core(S, core), n_exec, bailed, bail_op
 
 
 __all__ = ["fleet_vmloop", "vmloop_ref"]

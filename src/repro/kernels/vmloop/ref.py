@@ -23,18 +23,31 @@ the tripwire that catches a missed mirror.
 
 Opcode classification
 ---------------------
-``SUPPORTED_WORDS`` is the claimed set: stack, arithmetic (incl. the
-64-bit-exact ``*/``), comparison, bitwise, scalar memory, control flow,
-``dlit``, the non-spawning task words, and the exception machinery —
-everything whose per-instruction state touch is a handful of scalar
-gathers/scatters.  ``BAILOUT_WORDS`` are declined: IO/print (``out``/``in``/
-``send``/``receive`` suspend to the host service loop anyway), ``task``
-spawn, the LUT DSP scalars, and the wide vector/ANN ops.  On the first
-declined (or unknown/FIOS) opcode the loop *bails out before executing it*,
-reporting how many instructions it did run, so the host-side lax path can
-finish the slice from a byte-identical intermediate state.  Every ISA word
-MUST appear in exactly one of the two sets — ``supported_mask`` raises
-otherwise, and the ISA coverage test sweeps the claim.
+``SUPPORTED_WORDS`` is the claimed set — now nearly the whole ISA: stack,
+arithmetic (incl. the 64-bit-exact ``*/``), comparison, bitwise, scalar and
+vector memory, control flow, ``dlit``, the non-spawning task words, the
+exception machinery, printing into the out ring, the IO-suspending words
+(``out``/``in``/``send``/``receive`` execute their *suspension* in-kernel:
+pc rewind + ``io_op`` + ST_IOWAIT, then the loop exits on the status change
+with ``bailed`` false — delivery stays with the host service loop and the
+collective router between kernel invocations), the LUT fixed-point DSP
+scalars (``sin``/``log``/``sigmoid``/``relu``/``sqrt`` as VMEM table
+gathers; the tables ride as kernel operands), and the vector/ANN ops
+(``vecfold``/``dotprod`` lower onto the MXU via ``lax.dot_general`` with an
+int32 accumulator — the ``fixmatmul`` idiom, byte-exact because int32
+wraparound arithmetic is order-independent; ``lowp``/``highp``/``hull`` are
+the short on-chip IIR scan of ``rwkv6_scan`` shape).
+
+``BAILOUT_WORDS`` is down to ``task`` (spawning writes prio/deadline and
+arbitrary task slots outside CoreState) and ``rnd`` (the LCG state is
+uint32 while every kernel block is int32).  On the first declined (or
+unknown/FIOS) opcode the loop *bails out before executing it*, reporting
+how many instructions it did run plus *which opcode* bailed (``bail_op``,
+feeding the per-opcode bail histogram in ``pallas_stats()``), so the
+host-side lax path can finish the slice from a byte-identical intermediate
+state.  Every ISA word MUST appear in exactly one of the two sets —
+``supported_mask`` raises otherwise, and the ISA coverage test sweeps the
+claim.
 """
 
 from __future__ import annotations
@@ -47,6 +60,14 @@ import numpy as np
 from jax import lax
 
 from repro.config import VMConfig
+from repro.core.fixedpoint import fpsqrt_jnp
+from repro.core.fixedpoint.luts import (
+    LOG10_LUT,
+    SGLUT13,
+    SGLUT310,
+    _SIN_QUARTER,
+    _TWO_PI_MR,
+)
 from repro.core.vm.interp import STACK_NEEDS, _muldiv, _truncdiv, _truncmod
 from repro.core.vm.spec import (
     EXC_BOUNDS,
@@ -61,41 +82,50 @@ from repro.core.vm.spec import (
     ST_EVENT,
     ST_FREE,
     ST_HALT,
+    ST_IOWAIT,
     ST_RUN,
     ST_SLEEP,
     ST_YIELD,
     get_isa,
 )
-from repro.core.vm.vmstate import VMState
+from repro.core.vm.vmstate import OUT_CHR, OUT_NUM, VMState
 
 I32 = jnp.int32
 
 # VMState fields the supported opcode set can read or write, in VMState
-# order.  Everything else (out ring, mailboxes, rng, io_op, prio/deadline)
-# belongs to declined opcodes and never enters the kernel.
+# order.  Everything else (mailboxes, rng, prio/deadline) belongs to the
+# declined opcodes and the between-rounds router and never enters the
+# kernel.
 CORE_FIELDS = (
     "cs", "mem", "ds", "rs", "fs",
     "dsp", "rsp", "fsp", "pc", "tstatus",
     "timeout", "ev_addr", "ev_val",
     "catch_pc", "catch_rsp", "pending_exc", "last_exc",
-    "handlers", "cur", "now", "steps",
+    "io_op", "handlers", "cur", "now", "steps",
+    "out", "outp",
 )
-SCALAR_FIELDS = ("cur", "now", "steps")
+SCALAR_FIELDS = ("cur", "now", "steps", "outp")
 READONLY_FIELDS = ("cur", "now")      # never written by a supported opcode
 MUTATED_FIELDS = tuple(f for f in CORE_FIELDS if f not in READONLY_FIELDS)
 
 
 class Tables(NamedTuple):
-    """Constant dispatch tables, passed as explicit kernel operands (a Pallas
-    kernel cannot close over array constants).  All int32, shape
-    ``(num_ops + 1,)``; ``sup`` is the opcode claim mask (0/1), the rest are
-    the stack-effect pre-check of ``interp.exec_op``."""
+    """Constant dispatch + LUT tables, passed as explicit kernel operands (a
+    Pallas kernel cannot close over array constants).  All int32.  The five
+    ``(num_ops + 1,)`` dispatch tables: ``sup`` is the opcode claim mask
+    (0/1), the rest are the stack-effect pre-check of ``interp.exec_op``.
+    The four fixed-point LUTs back the DSP scalar words as VMEM gathers:
+    ``log10`` (90,), ``sg13`` (24,), ``sg310`` (6,), ``sinq`` (256,)."""
 
     sup: jnp.ndarray
     din: jnp.ndarray
     dout: jnp.ndarray
     fin: jnp.ndarray
     fout: jnp.ndarray
+    log10: jnp.ndarray
+    sg13: jnp.ndarray
+    sg310: jnp.ndarray
+    sinq: jnp.ndarray
 
 
 class CoreState(NamedTuple):
@@ -118,10 +148,13 @@ class CoreState(NamedTuple):
     catch_rsp: jnp.ndarray   # (T,)
     pending_exc: jnp.ndarray # (T,)
     last_exc: jnp.ndarray    # (T,)
+    io_op: jnp.ndarray       # (T,)
     handlers: jnp.ndarray    # (NUM_EXC,)
     cur: jnp.ndarray         # ()
     now: jnp.ndarray         # ()  read-only
     steps: jnp.ndarray       # ()
+    out: jnp.ndarray         # (2 * OUTN,)
+    outp: jnp.ndarray        # ()
 
 
 # --- opcode classification (must partition the whole word list) -------------
@@ -137,29 +170,33 @@ SUPPORTED_WORDS = (
     "=", "<>", "<", ">", "<=", ">=", "0=", "0<", "0>",
     # bitwise
     "and", "or", "xor", "invert", "lshift", "rshift",
-    # scalar memory (unified CS/DIOS address space)
-    "@", "!", "+!", "get", "put", "push", "pop", "len",
+    # scalar memory (unified CS/DIOS address space) + wide fill
+    "@", "!", "+!", "get", "put", "push", "pop", "len", "fill",
     # control flow
     "branch", "0branch", "ret", "exit", "exec",
     "doinit", "doloop", "i", "j", "unloop", "halt", "end",
     # literals
     "dlit",
+    # printing into the out ring
+    ".", "emit", "cr", "prstr", "vecprint",
+    # IO suspension (pc rewind + io_op + ST_IOWAIT, executed in-kernel;
+    # delivery stays with the host service / collective router)
+    "out", "in", "send", "receive",
     # tasks (non-spawning)
     "yield", "sleep", "await", "taskid", "ms", "steps",
     # exceptions
     "exception", "catch", "throw",
-)
-
-BAILOUT_WORDS = (
-    # IO / printing (out/in/send/receive suspend to the host loop)
-    ".", "emit", "cr", "prstr", "vecprint", "out", "in", "send", "receive",
-    # wide array fill + task spawn + LCG
-    "fill", "task", "rnd",
     # LUT fixed-point DSP scalars
     "sin", "log", "sigmoid", "relu", "sqrt",
     # vector / ANN ops
     "vecload", "vecscale", "vecadd", "vecmul", "vecfold", "vecmap",
     "dotprod", "vecmax", "hull", "lowp", "highp",
+)
+
+BAILOUT_WORDS = (
+    # task spawn writes prio/deadline + arbitrary task slots (outside
+    # CoreState); rnd advances the uint32 LCG (kernel blocks are int32).
+    "task", "rnd",
 )
 
 
@@ -187,7 +224,7 @@ def supported_mask(isa: ISA | None = None) -> np.ndarray:
 
 
 def make_tables(isa: ISA | None = None) -> Tables:
-    """Numpy dispatch tables for one ISA (see :class:`Tables`)."""
+    """Numpy dispatch + LUT tables for one ISA (see :class:`Tables`)."""
     isa = isa or get_isa()
     num_ops = isa.num_ops
     sup = supported_mask(isa)
@@ -200,7 +237,11 @@ def make_tables(isa: ISA | None = None) -> Tables:
         din[code], dout[code] = d_in, d_out
         fin[code], fout[code] = f_in, f_out
     return Tables(
-        sup=sup.astype(np.int32), din=din, dout=dout, fin=fin, fout=fout
+        sup=sup.astype(np.int32), din=din, dout=dout, fin=fin, fout=fout,
+        log10=np.asarray(LOG10_LUT, np.int32),
+        sg13=np.asarray(SGLUT13, np.int32),
+        sg310=np.asarray(SGLUT310, np.int32),
+        sinq=np.asarray(_SIN_QUARTER, np.int32),
     )
 
 
@@ -216,6 +257,45 @@ def merge_core(S: VMState, core: CoreState) -> VMState:
     return S._replace(**{f: getattr(core, f) for f in MUTATED_FIELDS})
 
 
+# --- LUT fixed-point scalars (mirror fixedpoint.luts *_jnp, but read the
+# --- tables from the kernel operand instead of module-level constants) -------
+
+def _fplog10_t(x, tb: Tables):
+    x = jnp.maximum(x.astype(I32), 10)
+    shift = jnp.zeros_like(x)
+    for _ in range(3):
+        big = x >= 100
+        shift = shift + big.astype(I32)
+        x = jnp.where(big, x // 10, x)
+    return shift * 100 + tb.log10[jnp.clip(x - 10, 0, 89)]
+
+
+def _fpsigmoid_t(x, tb: Tables):
+    x = x.astype(I32)
+    mirror = x < 0
+    ax = jnp.abs(x)
+    y1 = 500 + (ax * 231) // 1000
+    i13 = jnp.clip(_fplog10_t(ax // 5, tb) // 2 - 65, 0, 23)
+    y2 = tb.sg13[i13] + 731
+    i310 = jnp.clip(_fplog10_t(ax // 10, tb) // 10 - 14, 0, 5)
+    y3 = tb.sg310[i310] + 952
+    y = jnp.where(ax <= 1000, y1, jnp.where(ax < 3000, y2, y3))
+    y = jnp.where(ax >= 10000, 1000, y)
+    return jnp.where(mirror, 1000 - y, y)
+
+
+def _fpsin_t(x, tb: Tables):
+    x = jnp.mod(x.astype(I32), _TWO_PI_MR)
+    x = jnp.where(x < 0, x + _TWO_PI_MR, x)
+    t = x * 1024 // _TWO_PI_MR
+    quad = t // 256
+    idx = t % 256
+    up = tb.sinq[idx]
+    down = tb.sinq[255 - idx]
+    mag = jnp.where((quad % 2) == 0, up, down)
+    return jnp.where(quad >= 2, -mag, mag)
+
+
 # --- the step function (mirrors interp.step_instr over CoreState) ------------
 
 def make_core_step(cfg: VMConfig, isa: ISA | None = None):
@@ -226,11 +306,14 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
     subset — same helpers, same clip patterns, same exception dispatch — so
     a supported instruction produces bit-identical state on either engine.
     ``instr_supported`` is the bail predicate, evaluated on the *fetched*
-    instruction before any state is touched.
+    instruction before any state is touched.  Branches take ``(st, tb)``;
+    the DSP words gather from the LUT operands in ``tb``.
     """
     isa = isa or get_isa()
     CS, MEM = cfg.cs_size, cfg.mem_size
     DS, RS, FS = cfg.ds_size, cfg.rs_size, cfg.fs_size
+    MV = cfg.max_vec
+    OUTN = cfg.out_ring_size
 
     # -- low-level helpers (identical to interp._build) ----------------------
 
@@ -304,6 +387,66 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
             mem=st.mem.at[mem_idx].set(v, mode="drop"),
         )
 
+    def vread(st, addr, window, length=None):
+        """Gather ``window`` cells from addr; mask beyond header length."""
+        ln = mread(st, addr - 1) if length is None else length
+        ln = jnp.clip(ln, 0, window)
+        idx = addr + jnp.arange(window, dtype=I32)
+        in_mem = addr >= MEM_BASE
+        cs_vals = jnp.take(st.cs, jnp.clip(idx, 0, CS - 1))
+        mem_vals = jnp.take(st.mem, jnp.clip(idx - MEM_BASE, 0, MEM - 1))
+        vals = jnp.where(in_mem, mem_vals, cs_vals)
+        mask = jnp.arange(window) < ln
+        return jnp.where(mask, vals, 0), ln, mask
+
+    def vwrite(st, addr, vals, ln):
+        window = vals.shape[0]
+        mask = jnp.arange(window) < ln
+        in_mem = addr >= MEM_BASE
+        idx = addr + jnp.arange(window, dtype=I32)
+        cs_idx = jnp.where(mask & ~in_mem, jnp.clip(idx, 0, CS - 1), CS)
+        mem_idx = jnp.where(mask & in_mem, jnp.clip(idx - MEM_BASE, 0, MEM - 1), MEM)
+        return st._replace(
+            cs=st.cs.at[cs_idx].set(vals.astype(I32), mode="drop"),
+            mem=st.mem.at[mem_idx].set(vals.astype(I32), mode="drop"),
+        )
+
+    def out_write(st, kind, val):
+        p = st.outp
+        ok = p < OUTN
+        idx0 = jnp.where(ok, 2 * p, 2 * OUTN)
+        return st._replace(
+            out=st.out.at[idx0].set(kind, mode="drop")
+            .at[idx0 + 1].set(val.astype(I32), mode="drop"),
+            outp=jnp.where(ok, p + 1, p),
+        )
+
+    def out_write_vec(st, vals, ln):
+        window = vals.shape[0]
+        p = st.outp
+        k = jnp.arange(window, dtype=I32)
+        mask = (k < ln) & (p + k < OUTN)
+        base = 2 * (p + k)
+        kidx = jnp.where(mask, base, 2 * OUTN)
+        vidx = jnp.where(mask, base + 1, 2 * OUTN)
+        out = st.out.at[kidx].set(OUT_NUM, mode="drop")
+        out = out.at[vidx].set(vals.astype(I32), mode="drop")
+        return st._replace(out=out, outp=jnp.minimum(p + jnp.clip(ln, 0, window), OUTN))
+
+    # scale-vector application (paper Tab. 5 semantics) -----------------------
+
+    def vscale(vals, svals, s_on):
+        expanded = vals * jnp.where(svals > 0, svals, 1)
+        divisor = jnp.where(svals < 0, -svals, 1)
+        reduced = jnp.sign(vals) * (jnp.abs(vals) // divisor)
+        scaled = jnp.where(svals > 0, expanded, jnp.where(svals < 0, reduced, vals))
+        return jnp.where(s_on, scaled, vals)
+
+    def apply_scalevec(st, dst_vals, ln, saddr):
+        s_on = saddr != 0
+        svals, _, _ = vread(st, jnp.where(s_on, saddr, I32(1)), MV, length=ln)
+        return vscale(dst_vals, svals, s_on)
+
     # -- opcode implementations ----------------------------------------------
 
     def bin_op(f):
@@ -318,10 +461,17 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
             return dpush(st, f(v))
         return op
 
+    def un_op_t(f):
+        def op(st, tb):
+            st, v = dpop1(st)
+            return dpush(st, f(v, tb))
+        return op
+
     def cmp_op(f):
         return bin_op(lambda a, b: jnp.where(f(a, b), I32(-1), I32(0)))
 
-    B: dict[str, Callable] = {}
+    B: dict[str, Callable] = {}       # st-only bodies
+    TB: dict[str, Callable] = {}      # (st, tb) bodies — LUT gathers
 
     B["nop"] = lambda st: st
     B["dup"] = lambda st: dpush(st, dpeek(st))
@@ -483,6 +633,12 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
         return st
     B["pop"] = op_pop
 
+    def op_fill(st):
+        st, (v, arr) = dpopn(st, 2)
+        _, ln, _ = vread(st, arr, MV)
+        return vwrite(st, arr, jnp.full((MV,), 0, I32) + v, ln)
+    B["fill"] = op_fill
+
     def op_len(st):
         st, arr = dpop1(st)
         return dpush(st, mread(st, arr - 1))
@@ -566,6 +722,56 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
         return set_pc(dpush(st, v), pc + 1)
     B["dlit"] = op_dlit
 
+    # io / printing -----------------------------------------------------------
+
+    def op_print(st):
+        st, v = dpop1(st)
+        return out_write(st, OUT_NUM, v)
+    B["."] = op_print
+
+    def op_emit(st):
+        st, v = dpop1(st)
+        return out_write(st, OUT_CHR, v)
+    B["emit"] = op_emit
+
+    B["cr"] = lambda st: out_write(st, OUT_CHR, I32(10))
+
+    MAXSTR = 64
+
+    def op_prstr(st):
+        pc = cur_pc(st)
+        ln = jnp.clip(st.cs[jnp.clip(pc, 0, CS - 1)], 0, MAXSTR)
+        idx = pc + 1 + jnp.arange(MAXSTR, dtype=I32)
+        chars = jnp.take(st.cs, jnp.clip(idx, 0, CS - 1))
+        p = st.outp
+        k = jnp.arange(MAXSTR, dtype=I32)
+        mask = (k < ln) & (p + k < OUTN)
+        base = 2 * (p + k)
+        out = st.out.at[jnp.where(mask, base, 2 * OUTN)].set(OUT_CHR, mode="drop")
+        out = out.at[jnp.where(mask, base + 1, 2 * OUTN)].set(chars, mode="drop")
+        st = st._replace(out=out, outp=jnp.minimum(p + ln, OUTN))
+        return set_pc(st, pc + 1 + ln)
+    B["prstr"] = op_prstr
+
+    def op_vecprint(st):
+        st, arr = dpop1(st)
+        vals, ln, _ = vread(st, arr, MV)
+        return out_write_vec(st, vals, ln)
+    B["vecprint"] = op_vecprint
+
+    def make_io_suspend(name):
+        opc = isa.opcode[name]
+
+        def op(st):
+            # Rewind pc so the host re-inspects the op; args stay on DS.
+            st = set_pc(st, cur_pc(st) - 1)
+            st = st._replace(io_op=st.io_op.at[st.cur].set(opc))
+            return set_status(st, ST_IOWAIT)
+        return op
+
+    for _n in ("out", "in", "send", "receive"):
+        B[_n] = make_io_suspend(_n)
+
     # tasks (non-spawning) ----------------------------------------------------
 
     B["yield"] = lambda st: set_status(st, ST_YIELD)
@@ -615,17 +821,152 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
         return raise_exc(st, jnp.clip(exc, 1, NUM_EXC - 1))
     B["throw"] = op_throw
 
+    # fixed-point DSP scalars (LUT gathers from the kernel operand) -----------
+
+    TB["sin"] = un_op_t(lambda v, tb: _fpsin_t(v, tb).astype(I32))
+    TB["log"] = un_op_t(lambda v, tb: (_fplog10_t(v, tb) * 10).astype(I32))
+    TB["sigmoid"] = un_op_t(lambda v, tb: _fpsigmoid_t(v, tb).astype(I32))
+    B["relu"] = un_op(lambda v: jnp.maximum(v, 0))
+    B["sqrt"] = un_op(lambda v: fpsqrt_jnp(v).astype(I32))
+
+    # vector / ANN ops --------------------------------------------------------
+
+    def op_vecload(st):
+        st, (src, srcoff, dst) = dpopn(st, 3)
+        _, ln, _ = vread(st, dst, MV)
+        vals, _, _ = vread(st, src + srcoff, MV, length=ln)
+        return vwrite(st, dst, vals, ln)
+    B["vecload"] = op_vecload
+
+    def op_vecscale(st):
+        st, (src, dst, saddr) = dpopn(st, 3)
+        _, ln, _ = vread(st, dst, MV)
+        vals, _, _ = vread(st, src, MV, length=ln)
+        svals, _, _ = vread(st, saddr, MV, length=ln)
+        return vwrite(st, dst, vscale(vals, svals, jnp.bool_(True)), ln)
+    B["vecscale"] = op_vecscale
+
+    def make_eltwise(f):
+        def op(st):
+            st, (a, b, dst, saddr) = dpopn(st, 4)
+            _, ln, _ = vread(st, dst, MV)
+            av, _, _ = vread(st, a, MV, length=ln)
+            bv, _, _ = vread(st, b, MV, length=ln)
+            r = f(av, bv)
+            r = apply_scalevec(st, r, ln, saddr)
+            return vwrite(st, dst, r, ln)
+        return op
+
+    B["vecadd"] = make_eltwise(lambda a, b: a + b)
+    B["vecmul"] = make_eltwise(lambda a, b: a * b)
+
+    def op_vecfold(st):
+        # MXU lowering (the fixmatmul idiom): gather the (n x m) weight
+        # matrix and contract with dot_general at int32 — byte-exact with
+        # interp's sum-of-products because int32 wraparound addition is
+        # order-independent.
+        st, (inv, wgt, outv, saddr) = dpopn(st, 4)
+        iv, n, imask = vread(st, inv, MV)
+        _, m, _ = vread(st, outv, MV)
+        ii = jnp.arange(MV, dtype=I32)[:, None]
+        jj = jnp.arange(MV, dtype=I32)[None, :]
+        flat_idx = wgt + ii * m + jj
+        in_mem = wgt >= MEM_BASE
+        cs_w = jnp.take(st.cs, jnp.clip(flat_idx, 0, CS - 1))
+        mem_w = jnp.take(st.mem, jnp.clip(flat_idx - MEM_BASE, 0, MEM - 1))
+        w = jnp.where(in_mem, mem_w, cs_w)
+        wmask = (ii < n) & (jj < m)
+        w = jnp.where(wmask, w, 0)
+        acc = lax.dot_general(
+            iv, w, (((0,), (0,)), ((), ())), preferred_element_type=I32
+        ).astype(I32)
+        acc = apply_scalevec(st, acc, m, saddr)
+        return vwrite(st, outv, acc, m)
+    B["vecfold"] = op_vecfold
+
+    def op_vecmap(st, tb):
+        st, (src, dst, fn, saddr) = dpopn(st, 4)
+        _, ln, _ = vread(st, dst, MV)
+        vals, _, _ = vread(st, src, MV, length=ln)
+        mapped = lax.switch(
+            jnp.clip(fn, 0, 4),
+            [
+                lambda v: _fpsigmoid_t(v, tb).astype(I32),
+                lambda v: jnp.maximum(v, 0),
+                lambda v: _fpsin_t(v, tb).astype(I32),
+                lambda v: (_fplog10_t(v, tb) * 10).astype(I32),
+                lambda v: fpsqrt_jnp(v).astype(I32),
+            ],
+            vals,
+        )
+        mapped = apply_scalevec(st, mapped, ln, saddr)
+        return vwrite(st, dst, mapped, ln)
+    TB["vecmap"] = op_vecmap
+
+    def op_dotprod(st):
+        st, (a, b) = dpopn(st, 2)
+        av, n, _ = vread(st, a, MV)
+        bv, _, _ = vread(st, b, MV, length=n)
+        r = lax.dot_general(
+            av, bv, (((0,), (0,)), ((), ())), preferred_element_type=I32
+        )
+        return dpush(st, r.astype(I32))
+    B["dotprod"] = op_dotprod
+
+    def op_vecmax(st):
+        st, arr = dpop1(st)
+        vals, ln, mask = vread(st, arr, MV)
+        vals = jnp.where(mask, vals, jnp.iinfo(jnp.int32).min)
+        return dpush(st, jnp.argmax(vals).astype(I32))
+    B["vecmax"] = op_vecmax
+
+    def iir_lowpass(vals, ln, k):
+        """y_i = y_{i-1} + k*(x_i - y_{i-1})/1000, y_{-1} = x_0."""
+        def step(y, xm):
+            x, m = xm
+            y2 = y + _truncdiv(k * (x - y), I32(1000))
+            y2 = jnp.where(m, y2, y)
+            return y2, y2
+        mask = jnp.arange(MV) < ln
+        y0 = vals[0]
+        _, ys = lax.scan(step, y0, (vals, mask))
+        return ys
+
+    def make_filter(kind):
+        def op(st):
+            st, (arr, off, ln_req, k) = dpopn(st, 4)
+            base = arr + off
+            hdr_ln = mread(st, arr - 1)
+            ln = jnp.clip(jnp.minimum(ln_req, hdr_ln - off), 0, MV)
+            vals, _, _ = vread(st, base, MV, length=ln)
+            if kind == "hull":
+                x = jnp.abs(vals)
+                y = iir_lowpass(x, ln, k)
+            elif kind == "lowp":
+                y = iir_lowpass(vals, ln, k)
+            else:  # highp
+                y = vals - iir_lowpass(vals, ln, k)
+            return vwrite(st, base, y, ln)
+        return op
+
+    B["hull"] = make_filter("hull")
+    B["lowp"] = make_filter("lowp")
+    B["highp"] = make_filter("highp")
+
     # -- branch table over the whole opcode space -----------------------------
 
     num_ops = isa.num_ops
     sup = supported_mask(isa)
     branches: list[Callable] = []
-    identity = lambda st: st    # declined opcodes bail before dispatch
+    identity = lambda st, tb: st    # declined opcodes bail before dispatch
     for code in range(num_ops):
         nm = isa.name[code]
         if sup[code]:
-            fn = B.get(nm)
-            if fn is None:
+            if nm in TB:
+                fn = TB[nm]
+            elif nm in B:
+                fn = (lambda f: lambda st, tb: f(st))(B[nm])
+            else:
                 raise RuntimeError(
                     f"opcode {nm!r} claimed by SUPPORTED_WORDS but missing "
                     f"from the vmloop branch table"
@@ -647,7 +988,7 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
         bad = under | over
 
         def good(s):
-            return lax.switch(code, branches, s)
+            return lax.switch(code, branches, s, tb)
         return lax.cond(bad, lambda s: raise_exc(s, EXC_STACK), good, st)
 
     def step_instr(st: CoreState, tb: Tables) -> CoreState:
@@ -739,12 +1080,17 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
 
 
 def make_run_core(cfg: VMConfig, isa: ISA | None = None):
-    """Returns ``run_core(core, tables, steps) -> (core, n_exec, bailed)``:
-    the fetch/dispatch/execute loop of Alg. 1, restricted to the claimed
-    opcode set.  Stops on slice exhaustion, a status change
+    """Returns ``run_core(core, tables, steps) -> (core, n_exec, bailed,
+    bail_op)``: the fetch/dispatch/execute loop of Alg. 1, restricted to the
+    claimed opcode set.  Stops on slice exhaustion, a status change
     (suspend/halt/error), or the first unclaimed opcode — in the last case
     *before* executing it, so the host-side lax interpreter resumes from
-    identical state."""
+    identical state.  ``bail_op`` is the opcode that caused the bail
+    (clipped to ``num_ops`` for FIOS/trap), or -1 when the loop did not
+    bail — the raw feed for the per-opcode bail histogram."""
+    isa = isa or get_isa()
+    CS = cfg.cs_size
+    num_ops = isa.num_ops
     step_instr, instr_supported = make_core_step(cfg, isa)
 
     def run_core(core: CoreState, tb: Tables, steps):
@@ -761,7 +1107,13 @@ def make_run_core(cfg: VMConfig, isa: ISA | None = None):
         core, n, bailed = lax.while_loop(
             cond, body, (core, jnp.int32(0), jnp.bool_(False))
         )
-        return core, n, bailed
+        # bailed implies pc_ok & tag == 0 (instr_supported is True for
+        # every other shape), so the payload at pc is the declined opcode.
+        pc = core.pc[core.cur]
+        instr = core.cs[jnp.clip(pc, 0, CS - 1)]
+        payload = (instr >> 2).astype(I32)
+        bail_op = jnp.where(bailed, jnp.clip(payload, 0, num_ops), I32(-1))
+        return core, n, bailed, bail_op
 
     return run_core
 
@@ -769,9 +1121,9 @@ def make_run_core(cfg: VMConfig, isa: ISA | None = None):
 def vmloop_ref(S: VMState, steps: int, cfg: VMConfig, isa: ISA | None = None):
     """Pure-jnp oracle for the kernel: the same ``run_core`` loop vmapped
     over the node axis of a stacked fleet state.  Returns
-    ``(S', n_exec (N,), bailed (N,) bool)``."""
+    ``(S', n_exec (N,), bailed (N,) bool, bail_op (N,))``."""
     run_core = make_run_core(cfg, isa)
     tb = Tables(*[jnp.asarray(x) for x in make_tables(isa)])
     core = core_of(S)
-    core, n_exec, bailed = jax.vmap(lambda c: run_core(c, tb, steps))(core)
-    return merge_core(S, core), n_exec, bailed
+    core, n_exec, bailed, bail_op = jax.vmap(lambda c: run_core(c, tb, steps))(core)
+    return merge_core(S, core), n_exec, bailed, bail_op

@@ -12,12 +12,17 @@ implementation of the very same VM: one bytecode semantics, one software
 (lax/oracle) engine and one "hardware" (Pallas) engine, byte-exact.
 
 Bail-out protocol: the loop stops *before* the first instruction outside
-the claimed opcode set (IO-suspending words, FIOS calls, vector/DSP ops —
+the claimed opcode set (now only ``task`` spawn, ``rnd``, and FIOS calls —
 see ``ref.SUPPORTED_WORDS``/``ref.BAILOUT_WORDS``) and reports per node how
-many instructions it executed plus a bailed flag.  The caller finishes the
-slice with the lax interpreter from the byte-identical intermediate state
-(``executor.PallasSliceExecutor``), so mixed slices — some nodes computing,
-some suspending on ``send``/``out`` mid-slice — stay exact.
+many instructions it executed, a bailed flag, and the bailing opcode
+(``bail_op``, -1 when clean — the per-opcode bail histogram's raw feed).
+The caller finishes the slice with the lax interpreter from the
+byte-identical intermediate state (``executor.PallasSliceExecutor``), so
+mixed slices stay exact.  IO-suspending words (``send``/``receive``/
+``out``/``in``) are *claimed*: their suspension (pc rewind + ``io_op`` +
+ST_IOWAIT) executes in-kernel and the loop exits on the status change with
+``bailed`` false; delivery belongs to the host service loop and the
+collective router between kernel invocations.
 
 Grid/BlockSpec layout: grid ``(nodes_per_shard,)``; every input/output
 block is one node's row (``(1, ...)`` blocks, index map ``i -> (i, 0...)``),
@@ -30,6 +35,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.config import VMConfig
@@ -65,27 +71,29 @@ def vmloop_call(
 ):
     """Run the on-chip vmloop over a stacked (node-leading) ``CoreState``.
 
-    Returns ``(core', n_exec (N,) int32, bailed (N,) bool)``.  ``steps`` is
-    static (the micro-slice budget).  ``interpret=True`` lowers the kernel
-    through the Pallas interpreter — the CPU-testable path the equivalence
-    suite pins byte-exactly against the lax interpreter and the Oracle.
+    Returns ``(core', n_exec (N,) int32, bailed (N,) bool, bail_op (N,)
+    int32)``.  ``steps`` is static (the micro-slice budget).
+    ``interpret=True`` lowers the kernel through the Pallas interpreter —
+    the CPU-testable path the equivalence suite pins byte-exactly against
+    the lax interpreter and the Oracle.
     """
     N = core.pc.shape[0]
     run_core = make_run_core(cfg, isa)
-    # Constant dispatch tables ride along as (1, L) operands replicated to
-    # every grid program (a kernel cannot capture array constants).
+    # Constant dispatch + LUT tables ride along as (1, L_t) operands
+    # replicated to every grid program (a kernel cannot capture array
+    # constants); each table keeps its own length.
     tables = make_tables(isa)
-    L = tables.sup.shape[0]
+    tab_lens = [int(np.asarray(t).shape[0]) for t in tables]
 
     # TPU scalars must be 2-D: stacked () fields travel as (N, 1) blocks.
     core2 = core._replace(
         **{f: getattr(core, f).reshape(N, 1) for f in SCALAR_FIELDS}
     )
     ins = [getattr(core2, f) for f in CORE_FIELDS]
-    ins += [jnp.asarray(t).reshape(1, L) for t in tables]
+    ins += [jnp.asarray(t).reshape(1, L) for t, L in zip(tables, tab_lens)]
     per_shape = {f: tuple(getattr(core2, f).shape[1:]) for f in CORE_FIELDS}
-    out_fields = list(MUTATED_FIELDS) + ["n_exec", "bailed"]
-    out_shape = {**per_shape, "n_exec": (1,), "bailed": (1,)}
+    out_fields = list(MUTATED_FIELDS) + ["n_exec", "bailed", "bail_op"]
+    out_shape = {**per_shape, "n_exec": (1,), "bailed": (1,), "bail_op": (1,)}
     n_core = len(CORE_FIELDS)
     n_tab = len(Tables._fields)
 
@@ -101,21 +109,24 @@ def vmloop_call(
             vals[f] = v
         st = CoreState(**vals)
         tb = Tables(*[r[...][0] for r in tab_refs])
-        st, n, bailed = run_core(st, tb, steps)
+        st, n, bailed, bail_op = run_core(st, tb, steps)
         for f, r in zip(MUTATED_FIELDS, out_refs):
             if f in SCALAR_FIELDS:
                 r[0, 0] = getattr(st, f)
             else:
                 r[0] = getattr(st, f)
-        out_refs[-2][0, 0] = n
-        out_refs[-1][0, 0] = jnp.where(bailed, 1, 0).astype(jnp.int32)
+        out_refs[-3][0, 0] = n
+        out_refs[-2][0, 0] = jnp.where(bailed, 1, 0).astype(jnp.int32)
+        out_refs[-1][0, 0] = bail_op
 
-    tab_spec = pl.BlockSpec((1, L), lambda i: (0, 0))
+    tab_specs = [
+        pl.BlockSpec((1, L), lambda i: (0, 0)) for L in tab_lens
+    ]
     outs = pl.pallas_call(
         kernel,
         grid=(N,),
         in_specs=[_spec(per_shape[f]) for f in CORE_FIELDS]
-        + [tab_spec] * n_tab,
+        + tab_specs,
         out_specs=[_spec(out_shape[f]) for f in out_fields],
         out_shape=[
             jax.ShapeDtypeStruct((N,) + out_shape[f], jnp.int32)
@@ -130,7 +141,8 @@ def vmloop_call(
     named = dict(zip(out_fields, outs))
     n_exec = named.pop("n_exec")[:, 0]
     bailed = named.pop("bailed")[:, 0].astype(bool)
+    bail_op = named.pop("bail_op")[:, 0]
     for f in SCALAR_FIELDS:
         if f in named:
             named[f] = named[f][:, 0]
-    return core._replace(**named), n_exec, bailed
+    return core._replace(**named), n_exec, bailed, bail_op
