@@ -7,10 +7,14 @@ per-slice host loop), and the Pallas vmloop-kernel fleet
 bail-out counts; ``vm_fleet64_pallas_msg``: the message-bound ring through
 the fused ``rounds_aux`` fast path, rounds/s + msgs/s;
 ``vm_fleet64_pallas_ann``: the vecfold/dotprod tiny-ML workload — both
-gated in CI at bailed_frac < 5%)."""
+gated in CI at bailed_frac < 5%).  ``vm_fleet64_obs_overhead`` measures the
+telemetry plane (PR 8): obs-on vs obs-off steps/s on the pallas ring
+(CI-gated < 5% overhead), round-latency percentiles, deadline misses, and a
+Chrome trace-event export validated and uploaded as a CI artifact."""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -71,6 +75,33 @@ def mwps_ensemble(n: int = 32) -> tuple[float, float]:
     return total / dt / 1e6, per_slice * iters / dt / 1e6
 
 
+def _obs_latency(build, rounds: int, steps: int | None = None,
+                 deadline_ms: int = 50, **run_kw) -> dict:
+    """Short obs-instrumented rerun of a fleet row's workload: wall-latency
+    percentiles and virtual-clock deadline misses, attached as columns to
+    the row's METRICS entry.  Bounded rounds — the latency distribution
+    does not need workload completion — and a separate fleet, so the
+    row's timed obs-off measurement is untouched."""
+    from repro.obs import ObsConfig
+
+    kw = dict(run_kw)
+    if steps is not None:
+        kw["steps"] = steps
+    # Warm the obs round's compiled path on a throwaway fleet so the
+    # one-time compile doesn't land in the latency histogram.
+    build(ObsConfig(deadline_ms=deadline_ms)).run(max_rounds=2, **kw)
+    fleet = build(ObsConfig(deadline_ms=deadline_ms))
+    fleet.run(max_rounds=rounds, **kw)
+    m = fleet.metrics().as_dict()
+    return {
+        "latency_p50_ms": m["latency"]["p50_ms"],
+        "latency_p99_ms": m["latency"]["p99_ms"],
+        "latency_max_ms": m["latency"]["max_ms"],
+        "deadline_ms": deadline_ms,
+        "deadline_miss_total": m["counters"]["deadline_miss_total"],
+    }
+
+
 def bench_fleet(n: int = 64) -> tuple[float, float, int, int, int, int]:
     """Sensor-network message round: a token circles an n-node ring, each
     hop incrementing it — the paper's message-bound distributed regime
@@ -95,9 +126,9 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int, int, int]:
             return f"1 {1 % n} send receive swap drop . halt"
         return f"receive swap drop 1+ {(i + 1) % n} send halt"
 
-    def build(kind):
+    def build(kind, obs=None):
         if kind == "fleet":
-            fleet = FleetVM(cfg, n=n)
+            fleet = FleetVM(cfg, n=n, obs=obs)
             for i, node in enumerate(fleet.nodes):
                 node.launch(node.load(prog(i)))
             return fleet
@@ -143,6 +174,9 @@ def bench_fleet(n: int = 64) -> tuple[float, float, int, int, int, int]:
         "fleet_bytes": fleet_bytes,
         "host_bytes": host_bytes,
     }
+    METRICS["vm_fleet64_network"].update(
+        _obs_latency(lambda o: build("fleet", obs=o), rounds=res.rounds)
+    )
     return (fleet_steps / dt_fleet, host_steps / dt_host,
             fleet_xfer, host_xfer, fleet_bytes, host_bytes)
 
@@ -205,8 +239,8 @@ def bench_fleet_pallas_msg(n: int = 64, laps: int = 4, service_every: int = 8):
                     f"{nxt} send loop receive swap drop drop halt")
         return f"{laps} 0 do receive swap drop 1+ {nxt} send loop halt"
 
-    def build() -> FleetVM:
-        fleet = FleetVM(cfg, n=n, executor="pallas")
+    def build(obs=None) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas", obs=obs)
         for i, node in enumerate(fleet.nodes):
             node.launch(node.load(prog(i)))
         return fleet
@@ -237,6 +271,9 @@ def bench_fleet_pallas_msg(n: int = 64, laps: int = 4, service_every: int = 8):
         "bailed_node_rounds": stats["bailed_node_rounds"],
         "bail_hist": stats["bail_hist"],
     }
+    # Latency columns from a short obs-instrumented slice of the same
+    # workload (obs rounds run unchunked, so this is bounded, not a lap).
+    METRICS["vm_fleet64_pallas_msg"].update(_obs_latency(build, rounds=24))
     return res.rounds / dt, msgs / dt, stats
 
 
@@ -255,8 +292,8 @@ def bench_fleet_pallas_ann(n: int = 64):
         "drop halt"
     )
 
-    def build() -> FleetVM:
-        fleet = FleetVM(cfg, n=n, executor="pallas")
+    def build(obs=None) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas", obs=obs)
         for node in fleet.nodes:
             node.launch(node.load(prog))
         return fleet
@@ -281,7 +318,102 @@ def bench_fleet_pallas_ann(n: int = 64):
         "bailed_node_rounds": stats["bailed_node_rounds"],
         "bail_hist": stats["bail_hist"],
     }
+    METRICS["vm_fleet64_pallas_ann"].update(_obs_latency(build, rounds=16))
     return steps / dt, stats
+
+
+def bench_fleet_obs(n: int = 64):
+    """Telemetry-plane overhead: the :func:`bench_fleet_pallas` ring run
+    twice — obs off (the plain fused round) vs obs on (phased round with
+    on-device retirement counters, mailbox watermarks, and the deterministic
+    deadline clock) — plus a short span-traced run that exports a Chrome
+    trace-event file.  The CI gate holds ``overhead_frac`` (obs-on steps/s
+    cost) under 5% and validates the exported trace."""
+    from repro.obs import ObsConfig, validate_chrome_trace
+
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+
+    def prog(i: int) -> str:
+        if i == 0:
+            return f"1 {1 % n} send receive swap drop . halt"
+        return f"receive swap drop 1+ {(i + 1) % n} send halt"
+
+    def build(obs=None) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor="pallas", obs=obs)
+        for i, node in enumerate(fleet.nodes):
+            node.launch(node.load(prog(i)))
+        return fleet
+
+    # The gated config is the leave-on-in-production plane: on-device
+    # counters + the deterministic virtual-clock deadline, no per-round
+    # host sync (time_rounds=False keeps the round chain async).
+    obs_cfg = ObsConfig(deadline_ms=50, time_rounds=False)
+    # Warm both compiled paths (plain round kernel + counting kernel).
+    build().run(max_rounds=2)
+    build(obs_cfg).run(max_rounds=2)
+
+    fleet_off = build()
+    t0 = time.perf_counter()
+    res_off = fleet_off.run(max_rounds=4 * n)
+    dt_off = time.perf_counter() - t0
+    sps_off = int(res_off.steps.sum()) / dt_off
+
+    fleet_on = build(obs_cfg)
+    t0 = time.perf_counter()
+    res_on = fleet_on.run(max_rounds=4 * n)
+    dt_on = time.perf_counter() - t0
+    sps_on = int(res_on.steps.sum()) / dt_on
+    overhead = 1.0 - sps_on / sps_off
+    m = fleet_on.metrics().as_dict()
+
+    # Wall-latency percentiles come from a separate timed run — per-round
+    # wall timing blocks the async chain by construction, so it is
+    # reported but not part of the overhead gate.
+    fleet_lat = build(ObsConfig(deadline_ms=50))
+    fleet_lat.run(max_rounds=4 * n)
+    m_lat = fleet_lat.metrics().as_dict()
+    lat = m_lat["latency"]
+    # Same workload/executor as the vm_fleet64_pallas row — attach its
+    # latency / deadline columns there instead of rerunning it.
+    if "vm_fleet64_pallas" in METRICS:
+        METRICS["vm_fleet64_pallas"].update({
+            "latency_p50_ms": lat["p50_ms"],
+            "latency_p99_ms": lat["p99_ms"],
+            "latency_max_ms": lat["max_ms"],
+            "deadline_ms": m_lat["counters"]["deadline_ms"],
+            "deadline_miss_total": m_lat["counters"]["deadline_miss_total"],
+        })
+
+    # Short span-traced run: one Chrome trace-event file for the artifact
+    # (tracing syncs every phase, so it gets its own few rounds, untimed).
+    tr_fleet = build(ObsConfig(trace=True, deadline_ms=50))
+    tr_fleet.run(max_rounds=8)
+    trace_path = os.path.join(
+        os.environ.get("REPRO_TRACE_DIR", "."), "TRACE_vm_fleet64_obs.json"
+    )
+    payload = tr_fleet.export_trace(trace_path)
+    spans = validate_chrome_trace(payload)
+
+    METRICS["vm_fleet64_obs_overhead"] = {
+        "nodes": n,
+        "steps_per_s_off": sps_off,
+        "steps_per_s_on": sps_on,
+        "overhead_frac": overhead,
+        "rounds_observed": m["counters"]["rounds_observed"],
+        "instructions": m["counters"]["instructions"],
+        "mbox_high": m["counters"]["mbox_high"],
+        "mbox_drops": m["counters"]["mbox_drops"],
+        "io_susp": m["counters"]["io_susp"],
+        "deadline_ms": m["counters"]["deadline_ms"],
+        "deadline_miss_total": m["counters"]["deadline_miss_total"],
+        "latency_p50_ms": lat["p50_ms"],
+        "latency_p99_ms": lat["p99_ms"],
+        "latency_max_ms": lat["max_ms"],
+        "latency_mean_ms": lat["mean_ms"],
+        "trace_file": trace_path,
+        "trace_spans": spans,
+    }
+    return sps_on, sps_off, overhead, m
 
 
 def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
@@ -298,8 +430,8 @@ def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
     # comparison leg budgets the row's wall time.
     prog = ": work 0 begin 1+ dup 500 >= until drop ; work work halt"
 
-    def build(executor: str) -> FleetVM:
-        fleet = FleetVM(cfg, n=n, executor=executor)
+    def build(executor: str, obs=None) -> FleetVM:
+        fleet = FleetVM(cfg, n=n, executor=executor, obs=obs)
         for node in fleet.nodes:
             node.launch(node.load(prog))
         return fleet
@@ -338,6 +470,9 @@ def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
         + stats["traces_compiled"],
         "rounds": rounds,
     }
+    METRICS["vm_fleet64_trace"].update(
+        _obs_latency(lambda o: build("trace", obs=o), rounds=120)
+    )
     stats = dict(
         stats,
         traces_recorded=METRICS["vm_fleet64_trace"]["traces_recorded"],
@@ -416,11 +551,14 @@ def run() -> list[tuple[str, float, str]]:
                  f"{agg:.3f} MWPS aggregate over 32 lock-stepped VMs "
                  f"({single:.3f} per instance)"))
     f_sps, h_sps, f_xfer, h_xfer, f_bytes, h_bytes = bench_fleet(64)
+    mn = METRICS["vm_fleet64_network"]
     rows.append(("vm_fleet64_network", 1e6 / f_sps,
                  f"{f_sps:.0f} steps/s device-resident 64-node network "
                  f"({f_xfer} full-state transfers / {f_bytes} B) vs "
                  f"{h_sps:.0f} steps/s ({h_xfer} transfers / {h_bytes} B) "
-                 f"seed per-slice host loop"))
+                 f"seed per-slice host loop; round latency p50 "
+                 f"{mn['latency_p50_ms']:.2f} ms, "
+                 f"{mn['deadline_miss_total']} deadline misses"))
     pk_sps, pk_stats, pk_steps = bench_fleet_pallas(64, lax_steps_per_s=f_sps)
     rows.append(("vm_fleet64_pallas", 1e6 / pk_sps,
                  f"{pk_sps:.0f} steps/s pallas-vmloop 64-node network "
@@ -441,6 +579,16 @@ def run() -> list[tuple[str, float, str]]:
                  f"{a_sps:.0f} steps/s 64-node vecfold/dotprod ANN fleet "
                  f"({ma['kernel_steps']} in-kernel / {ma['fallback_steps']} "
                  f"lax-tail steps, bailed_frac={ma['bailed_frac']:.4f})"))
+    o_on, o_off, o_frac, o_m = bench_fleet_obs(64)
+    mo = METRICS["vm_fleet64_obs_overhead"]
+    rows.append(("vm_fleet64_obs_overhead", 1e6 / o_on,
+                 f"{o_on:.0f} steps/s obs-on vs {o_off:.0f} steps/s obs-off "
+                 f"64-node pallas ring (overhead {o_frac:.2%}; round latency "
+                 f"p50 {mo['latency_p50_ms']:.2f} ms / p99 "
+                 f"{mo['latency_p99_ms']:.2f} ms, "
+                 f"{mo['deadline_miss_total']} deadline misses @ "
+                 f"{mo['deadline_ms']} ms, mbox high {mo['mbox_high']}, "
+                 f"{mo['trace_spans']} trace spans exported)"))
     t_sps, g_sps, t_stats = bench_fleet_trace(64, network_steps_per_s=f_sps)
     rows.append(("vm_fleet64_trace", 1e6 / t_sps,
                  f"{t_sps:.0f} steps/s trace-specialized hot 64-node fleet "

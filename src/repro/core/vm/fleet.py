@@ -127,12 +127,16 @@ class FleetKernels:
         elif executor == "trace":
             from repro.core.vm.trace import TraceJitExecutor
             self.executor = TraceJitExecutor(cfg, isa, mesh=mesh)
+        elif executor == "oracle":
+            from repro.core.vm.executor import OracleFleetExecutor
+            self.executor = OracleFleetExecutor(cfg, isa, mesh=mesh)
         else:
             raise ValueError(
                 f"unknown fleet executor {executor!r}: valid executors are "
-                "'batched', 'pallas', 'trace'"
+                "'batched', 'oracle', 'pallas', 'trace'"
             )
         self.interp = self.executor.interp
+        self._obs_kernels = None
         self._build()
 
     def _build(self):
@@ -157,12 +161,9 @@ class FleetKernels:
             def constrain(S: VMState) -> VMState:
                 return S
 
-        def post_slice(S: VMState, steps0):
-            # Virtual clock from the calibrated per-instruction time
-            # (REXAVM.run step 2, per node).
-            inc = jnp.maximum(1, (S.steps - steps0) * cfg.us_per_instr // 1000)
-            S = S._replace(now=S.now + inc)
-            S, progress = route(constrain(S))
+        self._constrain = constrain
+
+        def warp_fn(S: VMState, progress):
             # Virtual-time warp to the earliest wake-up (REXAVM.run step 4).
             runnable = (S.tstatus == ST_YIELD).any(axis=1)
             iowait = (S.tstatus == ST_IOWAIT).any(axis=1)
@@ -178,6 +179,16 @@ class FleetKernels:
                 & (wake > S.now)
             )
             return constrain(S._replace(now=jnp.where(warp, wake, S.now)))
+
+        self._warp_fn = warp_fn
+
+        def post_slice(S: VMState, steps0):
+            # Virtual clock from the calibrated per-instruction time
+            # (REXAVM.run step 2, per node).
+            inc = jnp.maximum(1, (S.steps - steps0) * cfg.us_per_instr // 1000)
+            S = S._replace(now=S.now + inc)
+            S, progress = route(constrain(S))
+            return warp_fn(S, progress)
 
         if getattr(self.executor, "host_driven", False):
             # Trace-JIT engine: the slice itself is host-orchestrated (a
@@ -251,6 +262,98 @@ class FleetKernels:
         else:
             self.round_aux = None
             self.rounds_aux = None
+
+    def obs(self) -> "_ObsKernels":
+        """Lazy phased-round kernels for the observability plane.
+
+        The obs round is the same round split at its phase seams so the
+        fleet can trace/count each phase: executor ``obs_schedule`` +
+        ``obs_execute`` (slice), then ``clock_route`` (virtual clock + the
+        obs router, returning per-node clock increments, message drops and
+        the mailbox high-watermark), ``warp`` (the identical warp tail) and
+        ``accum`` (fold one round's measurements into the device-resident
+        :class:`~repro.obs.metrics.ObsCounters`).  clock_route + warp
+        compose to exactly ``post_slice`` — byte-exactness is inherited,
+        not re-proven.  Built on first use: obs-off fleets never trace
+        these."""
+        if self._obs_kernels is None:
+            from repro.core.vm.routing import build_router
+            from repro.obs.metrics import ObsCounters
+
+            cfg = self.cfg
+            constrain = self._constrain
+            warp_fn = self._warp_fn
+            route_obs = build_router(cfg, self.isa, obs=True)
+
+            def clock_route(S: VMState, steps0):
+                inc = jnp.maximum(
+                    1, (S.steps - steps0) * cfg.us_per_instr // 1000
+                )
+                S = S._replace(now=S.now + inc)
+                S, progress, (drops, depth) = route_obs(constrain(S))
+                return S, inc, drops, depth, progress
+
+            def accum(acc: ObsCounters, aux, inc, drops, depth, deadline_ms):
+                # Virtual-clock deadline: a node misses when its round's
+                # clock increment exceeds the budget — a pure function of
+                # executed instructions, so byte-exact across executors.
+                miss = ((inc > deadline_ms) & (deadline_ms > 0)).astype(I32)
+                return ObsCounters(
+                    op_retired=acc.op_retired + aux.op_hist,
+                    mbox_high=jnp.maximum(acc.mbox_high, depth),
+                    mbox_drops=acc.mbox_drops + drops,
+                    io_susp=acc.io_susp + aux.io_susp,
+                    deopts=acc.deopts + aux.deopts,
+                    deadline_miss=acc.deadline_miss + miss,
+                    rounds=acc.rounds + 1,
+                )
+
+            def post(S: VMState, steps0, acc: ObsCounters, aux, deadline_ms):
+                # Fused clock_route + warp + accum: the untraced obs round
+                # pays one dispatch for the whole post-slice, not three —
+                # the per-phase kernels exist for span tracing only.
+                S, inc, drops, depth, progress = clock_route(S, steps0)
+                S = warp_fn(S, progress)
+                return S, accum(acc, aux, inc, drops, depth, deadline_ms)
+
+            ex = self.executor
+            if not getattr(ex, "host_driven", False):
+                # Pure-jax executors (batched, pallas): the whole untraced
+                # obs round — schedule + slice + post — as ONE dispatch,
+                # matching the plain round's dispatch count so counters
+                # cost compute, not call overhead.  Host-driven executors
+                # (oracle, trace) keep the phased fallback.
+                def round1(S: VMState, acc: ObsCounters, deadline_ms,
+                           steps: int):
+                    steps0 = S.steps
+                    S, found = ex.obs_schedule(S)
+                    S, aux = ex.obs_execute(S, steps, found)
+                    S, acc = post(S, steps0, acc, aux, deadline_ms)
+                    return S, acc, aux
+
+                round1 = jax.jit(round1, static_argnames=("steps",))
+            else:
+                round1 = None
+
+            self._obs_kernels = _ObsKernels(
+                clock_route=jax.jit(clock_route),
+                warp=jax.jit(warp_fn),
+                accum=jax.jit(accum),
+                post=jax.jit(post),
+                round1=round1,
+            )
+        return self._obs_kernels
+
+
+class _ObsKernels:
+    """Jitted phase kernels of the obs round (see ``FleetKernels.obs``)."""
+
+    def __init__(self, clock_route, warp, accum, post, round1=None):
+        self.clock_route = clock_route
+        self.warp = warp
+        self.accum = accum
+        self.post = post
+        self.round1 = round1
 
 
 @functools.lru_cache(maxsize=8)
@@ -332,6 +435,7 @@ class FleetVM:
         mesh=None,
         io_mode: str = "partial",
         executor: str = "batched",
+        obs=None,
     ):
         if nodes is not None:
             assert len(nodes) >= 1
@@ -395,6 +499,29 @@ class FleetVM:
             self.kernels.executor.stats() if executor == "trace" else None
         )
         self._trace_steps_total = 0        # instrs executed across run()s
+        self.rounds_total = 0              # fleet rounds across run()s
+        # Observability plane (repro.obs): fully off by default — no extra
+        # device outputs, no per-phase syncs, nothing accumulated.
+        from repro.obs.metrics import normalize_obs
+        self.obs = normalize_obs(obs)
+        self._counters = None              # device ObsCounters (lazy adds)
+        self._tracer = None
+        self._deadline = None
+        if self.obs is not None:
+            from repro.obs.deadline import DeadlineMonitor
+            from repro.obs.metrics import zero_counters
+            from repro.obs.tracing import RoundTracer
+            self._counters = zero_counters(self.n, isa)
+            self._tracer = RoundTracer(
+                ring=self.obs.trace_ring,
+                enabled=self.obs.trace,
+                profiler=self.obs.profiler,
+            )
+            self._deadline = DeadlineMonitor(self.obs.deadline_wall_ms)
+            self.io_service.tracer = self._tracer
+            # Attach the executor's counting engine (a no-op if another
+            # fleet sharing these cached kernels already did).
+            self.kernels.executor.ensure_obs()
 
     @classmethod
     def from_nodes(cls, nodes: list[REXAVM], **kw) -> "FleetVM":
@@ -451,7 +578,17 @@ class FleetVM:
         the fraction of executed instructions that ran specialized —
         counted since this fleet was created, across its run()s."""
         if self._trace0 is None:
-            return {"executor": self.executor_kind}
+            # Schema-stable under every executor: same keys, zeroed.
+            return {
+                "executor": self.executor_kind,
+                "traces_recorded": 0,
+                "traces_compiled": 0,
+                "spec_steps": 0,
+                "guard_exits": 0,
+                "total_steps": 0,
+                "specialized_frac": 0.0,
+                "groups": {},
+            }
         now = self.kernels.executor.stats()
         base = self._trace0
         spec = now["spec_steps"] - base["spec_steps"]
@@ -468,8 +605,12 @@ class FleetVM:
         }
 
     def transfer_stats(self) -> dict:
-        """All movement counters in one dict (serve monitor / benchmarks)."""
+        """All movement counters in one dict (serve monitor / benchmarks),
+        self-describing: ``executor`` and ``rounds`` identify which engine
+        moved these bytes over how many fleet rounds."""
         return {
+            "executor": self.executor_kind,
+            "rounds": self.rounds_total,
             "h2d": self.h2d,
             "d2h": self.d2h,
             "h2d_bytes": self.h2d_bytes,
@@ -480,6 +621,70 @@ class FleetVM:
             "io_d2h_bytes": self.io_service.d2h_bytes,
             "probes": self.probes,
         }
+
+    def metrics(self):
+        """One schema-stable telemetry snapshot — the unified namespace
+        over today's per-backend stats dicts plus the on-device obs
+        counters and the round-latency monitor.  Identical key structure
+        under every executor and under obs on/off (zeroed where nothing
+        was measured); the only device sync is the counter pull, and only
+        when obs is on."""
+        from repro.obs.deadline import DeadlineMonitor
+        from repro.obs.metrics import FleetMetrics, hist_to_dict, n_bins
+
+        isa = self.kernels.isa
+        if self._counters is not None:
+            c = jax.device_get(self._counters)
+            op = np.asarray(c.op_retired)
+            miss = np.asarray(c.deadline_miss)
+            mbox_high, mbox_drops = int(c.mbox_high), int(c.mbox_drops)
+            io_susp, deopts = int(c.io_susp), int(c.deopts)
+            rounds_observed = int(c.rounds)
+        else:
+            op = np.zeros(n_bins(isa), np.int64)
+            miss = np.zeros(self.n, np.int64)
+            mbox_high = mbox_drops = io_susp = deopts = rounds_observed = 0
+        counters = {
+            "op_retired": hist_to_dict(op, isa),
+            "instructions": int(op.sum()),
+            "mbox_high": mbox_high,
+            "mbox_drops": mbox_drops,
+            "io_susp": io_susp,
+            "deopts": deopts,
+            "deadline_ms": int(self.obs.deadline_ms) if self.obs else 0,
+            "deadline_miss": [int(x) for x in miss],
+            "deadline_miss_total": int(miss.sum()),
+            "rounds_observed": rounds_observed,
+        }
+        latency = (
+            self._deadline if self._deadline is not None else DeadlineMonitor()
+        ).snapshot()
+        pallas = self.pallas_stats()
+        pallas.pop("executor", None)
+        trace = self.trace_stats()
+        trace.pop("executor", None)
+        transfers = self.transfer_stats()
+        transfers.pop("executor", None)
+        transfers.pop("rounds", None)
+        return FleetMetrics(
+            executor=self.executor_kind,
+            rounds=self.rounds_total,
+            counters=counters,
+            latency=latency,
+            pallas=pallas,
+            trace=trace,
+            transfers=transfers,
+        )
+
+    def export_trace(self, path=None):
+        """Write the recorded round-phase spans as Chrome trace-event JSON
+        (open in chrome://tracing or ui.perfetto.dev).  Requires
+        ``obs=ObsConfig(trace=True)``; without it the export is valid but
+        empty.  Returns the payload dict."""
+        from repro.obs.tracing import RoundTracer, export_chrome_trace
+
+        tracer = self._tracer or RoundTracer(enabled=False)
+        return export_chrome_trace(tracer, path)
 
     # -- state movement --------------------------------------------------------
 
@@ -555,6 +760,65 @@ class FleetVM:
         self.push()
         return progress
 
+    def _round_obs(self, steps: int) -> None:
+        """One observed fleet round: the phased round (schedule -> execute
+        -> clock+router -> warp) plus counter accumulation.
+
+        Stays as async as the plain round — every phase output chains
+        lazily and ``accum`` only *adds* device scalars — except when span
+        tracing or round timing is on, where each phase (or the round)
+        must sync to make its wall time honest.  Untraced rounds on
+        pure-jax executors take ``_ObsKernels.round1``: the whole round as
+        one dispatch, same count as the plain round."""
+        import time as _time
+
+        ob = self.kernels.obs()
+        ex = self.kernels.executor
+        tr = self._tracer
+        cfg_obs = self.obs
+        timing = cfg_obs.time_rounds or cfg_obs.deadline_wall_ms > 0
+        t0 = _time.perf_counter() if timing else 0.0
+        S = self._S
+        steps0 = S.steps
+        if tr.enabled:
+            with tr.span("schedule"):
+                S, found = ex.obs_schedule(S)
+                jax.block_until_ready(S)
+            with tr.span("execute"):
+                S, aux = ex.obs_execute(S, steps, found)
+                jax.block_until_ready(S)
+            with tr.span("router"):
+                S, inc, drops, depth, progress = ob.clock_route(S, steps0)
+                jax.block_until_ready(S)
+            with tr.span("warp"):
+                S = ob.warp(S, progress)
+                jax.block_until_ready(S)
+            self._S = S
+            self._counters = ob.accum(
+                self._counters, aux, inc, drops, depth, cfg_obs.deadline_ms
+            )
+        elif ob.round1 is not None:
+            S, self._counters, aux = ob.round1(
+                S, self._counters, cfg_obs.deadline_ms, steps=steps
+            )
+            self._S = S
+        else:
+            S, found = ex.obs_schedule(S)
+            S, aux = ex.obs_execute(S, steps, found)
+            S, self._counters = ob.post(
+                S, steps0, self._counters, aux, cfg_obs.deadline_ms
+            )
+            self._S = S
+        if self.executor_kind == "pallas":
+            # pallas_stats() accumulators ride the same ExecAux.
+            self._kernel_steps_acc = self._kernel_steps_acc + aux.kernel_steps
+            self._bailed_acc = self._bailed_acc + aux.bailed
+            self._bail_hist_acc = self._bail_hist_acc + aux.bail_hist
+        if timing:
+            jax.block_until_ready(self._S)
+            self._deadline.record((_time.perf_counter() - t0) * 1e3)
+        tr.tick()
+
     def run(
         self,
         max_rounds: int = 10_000,
@@ -581,7 +845,13 @@ class FleetVM:
         round_aux = self.kernels.round_aux
         rounds_aux = self.kernels.rounds_aux
         while rounds < max_rounds:
-            if rounds_aux is not None and service_every > 1:
+            if self.obs is not None:
+                # Observed rounds run phased (counters, spans, deadlines);
+                # message-bound chunking is bypassed so every round is
+                # individually accounted.
+                self._round_obs(steps)
+                rounds += 1
+            elif rounds_aux is not None and service_every > 1:
                 # Message-bound round mode: probe only at chunk boundaries.
                 chunk = min(service_every, max_rounds - rounds)
                 self._S, n_sum, b_sum, hist = rounds_aux(self._S, steps, chunk)
@@ -629,6 +899,7 @@ class FleetVM:
                 stall = 0
             last_steps_sum = steps_sum
         self.sync()
+        self.rounds_total += rounds
         executed = np.asarray(self._S.steps) - steps0
         self._trace_steps_total += int(executed.sum())
         self._total_steps_acc += int(executed.sum())
@@ -647,7 +918,9 @@ class FleetVM:
 # Host-routed reference (the operational specification of one fleet round)
 # ---------------------------------------------------------------------------
 
-def reference_round(nodes: list[REXAVM], steps: int | None = None) -> list[bool]:
+def reference_round(
+    nodes: list[REXAVM], steps: int | None = None, obs: dict | None = None
+) -> list[bool]:
     """One fleet round over independent host-looped REXAVMs.
 
     Numpy mirror of :meth:`FleetKernels.round`: slice every node, advance its
@@ -656,6 +929,11 @@ def reference_round(nodes: list[REXAVM], steps: int | None = None) -> list[bool]
     then apply the per-node time warp.  ``FleetVM`` must match this
     byte-exactly (tests/test_vm_fleet.py).  Returns the per-node progress
     flags (mirrors the routing progress vector).
+
+    ``obs``, when given, is a dict the round's router counters accumulate
+    into — ``drops`` (messages to out-of-range destinations) and
+    ``depth_peak`` (deepest mailbox after the send phase) — the reference
+    semantics for ``ObsCounters.mbox_drops``/``mbox_high``.
     """
     cfg = nodes[0].cfg
     isa = nodes[0].isa
@@ -690,11 +968,18 @@ def reference_round(nodes: list[REXAVM], steps: int | None = None) -> list[bool]
                 mst.mbox[2 * slot] = i
                 mst.mbox[2 * slot + 1] = v
                 mst.mbox_wr[...] = int(mst.mbox_wr) + 1
+            elif obs is not None:
+                obs["drops"] = obs.get("drops", 0) + 1
             st.dsp[t] = dsp - 2
             st.pc[t] = int(st.pc[t]) + 1
             st.io_op[t] = 0
             st.tstatus[t] = ST_YIELD
             progress[i] = True
+    if obs is not None:
+        depth = max(
+            int(vm.state.mbox_wr) - int(vm.state.mbox_rd) for vm in nodes
+        )
+        obs["depth_peak"] = max(obs.get("depth_peak", 0), depth)
     # Phase 2: all receives.
     for i, vm in enumerate(nodes):
         st = vm.state

@@ -142,10 +142,18 @@ class FleetIOService:
         self.nodes_serviced = 0      # node-slices moved (both directions)
         self.d2h_bytes = 0
         self.h2d_bytes = 0
+        self.tracer = None           # optional repro.obs.RoundTracer
 
     def service(self, S, node_idx) -> tuple[object, bool]:
         """Service host-IO suspensions of ``node_idx`` against device state
         ``S`` (a stacked fleet ``VMState``).  Returns ``(S', progress)``."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            with tr.span("io_service"):
+                return self._service(S, node_idx)
+        return self._service(S, node_idx)
+
+    def _service(self, S, node_idx) -> tuple[object, bool]:
         import jax
 
         from repro.core.vm import vmstate as vms

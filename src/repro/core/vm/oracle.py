@@ -80,6 +80,11 @@ class Oracle:
         # successful in-bounds fetch, before the instruction executes; lets
         # core/vm/trace.py use this reference interpreter as its recorder.
         self.trace_hook = None
+        # Optional counter callback ``hook(pc_ok, instr)`` invoked once per
+        # *retired* step — including the invalid-pc trap step, which retires
+        # (bumps ``steps``) without a fetch; lets obs/metrics.py count every
+        # bin the device engines count.
+        self.step_hook = None
 
     # -- helpers operating on numpy state -------------------------------------
 
@@ -684,6 +689,8 @@ class Oracle:
         t = int(st.cur)
         pc = int(st.pc[t])
         if pc < 0 or pc >= cfg.cs_size:
+            if self.step_hook is not None:
+                self.step_hook(False, 0)
             self._raise(st, EXC_TRAP)
             st.tstatus[t] = ST_ERR
             st.steps[...] = int(st.steps) + 1
@@ -692,6 +699,8 @@ class Oracle:
         instr = int(st.cs[pc])
         if self.trace_hook is not None:
             self.trace_hook(pc, instr)
+        if self.step_hook is not None:
+            self.step_hook(True, instr)
         tag = instr & 3
         payload = instr >> 2  # arithmetic shift (numpy int32 -> python int)
 

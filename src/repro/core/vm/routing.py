@@ -50,12 +50,18 @@ from repro.core.vm.vmstate import VMState
 I32 = jnp.int32
 
 
-def build_router(cfg: VMConfig, isa: ISA | None = None):
+def build_router(cfg: VMConfig, isa: ISA | None = None, obs: bool = False):
     """Returns ``route(S) -> (S, progress)`` over a stacked fleet ``VMState``.
 
     ``progress[i]`` is True when any of node ``i``'s tasks was resumed this
     round — the per-node analogue of ``REXAVM._service_io``'s return value,
     consumed by the fleet round's virtual-time warp.
+
+    With ``obs=True`` the router returns ``(S, progress, (drops, depth))``:
+    ``drops`` is the number of messages dropped this round (sends to an
+    out-of-range destination), ``depth`` the mailbox high-watermark — the
+    deepest ring occupancy on any node right after the send phase (before
+    receives pop), i.e. the round's peak queueing pressure.
     """
     isa = isa or get_isa()
     T = cfg.max_tasks
@@ -124,7 +130,8 @@ def build_router(cfg: VMConfig, isa: ISA | None = None):
             io_op=jnp.where(resume, I32(0), S.io_op),
             tstatus=jnp.where(resume, I32(ST_YIELD), S.tstatus),
         )
-        return S, resume.any(axis=1)
+        drops = (is_send & ~dst_ok).sum().astype(I32)
+        return S, resume.any(axis=1), drops
 
     def recv_phase(S: VMState):
         """All receives: node-local ring pops, tasks in ascending order."""
@@ -162,8 +169,14 @@ def build_router(cfg: VMConfig, isa: ISA | None = None):
         return S, progress
 
     def route(S: VMState):
-        S, sent = send_phase(S)
+        S, sent, _ = send_phase(S)
         S, received = recv_phase(S)
         return S, sent | received
 
-    return route
+    def route_obs(S: VMState):
+        S, sent, drops = send_phase(S)
+        depth = jnp.max(S.mbox_wr - S.mbox_rd).astype(I32)
+        S, received = recv_phase(S)
+        return S, sent | received, (drops, depth)
+
+    return route_obs if obs else route

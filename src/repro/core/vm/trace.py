@@ -62,7 +62,7 @@ import hashlib
 import numpy as np
 
 from repro.config import VMConfig
-from repro.core.vm.spec import ISA, ST_RUN, ST_YIELD, TAG_OP, get_isa
+from repro.core.vm.spec import ISA, ST_IOWAIT, ST_RUN, ST_YIELD, TAG_OP, get_isa
 from repro.core.vm import vmstate as vms
 from repro.core.vm.vmstate import VMState
 
@@ -94,7 +94,10 @@ class _Trace:
     never indexes past ``length``) so every trace of one ``branch_set``
     shares a single XLA compilation."""
 
-    __slots__ = ("pcs", "instrs", "kinds", "length", "loop_start", "branch_set")
+    __slots__ = (
+        "pcs", "instrs", "kinds", "length", "loop_start", "branch_set",
+        "num_ops", "_hist_prefix",
+    )
 
     def __init__(self, rec: list[tuple[int, int]], num_ops: int, loop_start: int):
         kinds_raw = []
@@ -106,6 +109,8 @@ class _Trace:
         index = {kc: i for i, kc in enumerate(self.branch_set)}
         self.length = len(rec)
         self.loop_start = loop_start
+        self.num_ops = num_ops
+        self._hist_prefix = None
 
         def pad(xs, fill):
             return np.asarray(
@@ -118,6 +123,32 @@ class _Trace:
 
     def __len__(self):
         return self.length
+
+    @property
+    def hist_prefix(self):
+        """Retirement-bin prefix sums over the recorded path:
+        ``hist_prefix[k]`` is the ``(num_ops + 4,)`` histogram of the first
+        ``k`` recorded positions (``repro.obs.metrics`` bin layout; recorded
+        pcs are always in bounds — the Oracle fetched them — so the
+        invalid-pc bin never appears here).  Rows past ``length`` repeat the
+        last real row.  Lazy: only the obs execute path pays for it, and
+        :func:`repro.obs.metrics.trace_spec_hist` turns it into exact bin
+        counts for any number of specialized steps, loop wraps included."""
+        if self._hist_prefix is None:
+            nb = self.num_ops + 4
+            hp = np.zeros((TRACE_MAX + 1, nb), np.int32)
+            for k in range(TRACE_MAX):
+                hp[k + 1] = hp[k]
+                if k < self.length:
+                    instr = int(self.instrs[k])
+                    tag = instr & 3
+                    if tag == TAG_OP:
+                        b = min(max(instr >> 2, 0), self.num_ops)
+                    else:
+                        b = self.num_ops + tag
+                    hp[k + 1, b] += 1
+            self._hist_prefix = hp
+        return self._hist_prefix
 
 
 def _build_trace_fn(interp, cfg: VMConfig, branch_set):
@@ -225,6 +256,9 @@ class _TraceEngine:
             )
 
         self.finish_b = jax.jit(jax.vmap(finish_one))
+        # Counting twin of finish_b — (S, remaining) -> (S, hists) — built
+        # on first obs use (see ensure_obs).
+        self.finish_obs_b = None
 
         self.traces: dict = {}   # (prog_key, entry_pc, cap) -> _Trace
         self.fns: dict = {}      # shape tuple -> compiled trace fn
@@ -292,6 +326,16 @@ class _TraceEngine:
             self.traces_compiled += 1
         return fn
 
+    def ensure_obs(self) -> None:
+        """Attach the counting generic tail (byte-identical to finish_b
+        with a histogram riding the carry)."""
+        if self.finish_obs_b is None:
+            import jax
+            from repro.obs.metrics import make_counting_finish
+            self.finish_obs_b = jax.jit(
+                jax.vmap(make_counting_finish(self.interp))
+            )
+
     def note_group(self, prog_key, n_nodes: int) -> None:
         g = self.group_stats.setdefault(
             prog_key, {"slices": 0, "node_slices": 0}
@@ -332,12 +376,21 @@ class TraceJitExecutor:
     backend = "trace"
     host_driven = True
 
-    def __init__(self, cfg: VMConfig, isa: ISA | None = None, mesh=None):
+    def __init__(
+        self, cfg: VMConfig, isa: ISA | None = None, mesh=None, obs=None
+    ):
+        from repro.obs.metrics import normalize_obs
+
         self.cfg = cfg
         self.mesh = mesh
         self.engine = get_trace_engine(cfg, isa)
         self.interp = self.engine.interp
         self._prog_keys: list | None = None
+        self.obs = normalize_obs(obs)
+        self.op_hist = None
+        if self.obs is not None:
+            from repro.obs.metrics import n_bins
+            self.op_hist = np.zeros(n_bins(self.engine.isa), np.int64)
         self.h2d = 0
         self.d2h = 0
         self.h2d_bytes = 0
@@ -355,11 +408,28 @@ class TraceJitExecutor:
     # -- batched slice (device state in / device state out) -------------------
 
     def run_slice_batched(self, S: VMState, steps: int):
+        eng = self.engine
+        S, found = eng.schedule_b(S)
+        S, aux = self._execute_after_schedule(
+            S, steps, obs=self.op_hist is not None
+        )
+        if aux is not None:
+            self.op_hist += np.asarray(aux.op_hist)
+        return S, found
+
+    def _execute_after_schedule(
+        self, S: VMState, steps: int, obs: bool = False
+    ):
+        """Everything after the (not idempotent) schedule phase: probe,
+        group, apply compiled traces, generic tail.  With ``obs`` the
+        specialized steps are binned *without re-execution* — each group's
+        per-node counts feed the closed form over the trace's
+        ``hist_prefix`` — the counting tail covers the rest, and the
+        return is ``(S, ExecAux)`` instead of ``(S, None)``."""
         import jax
         import jax.numpy as jnp
 
         eng = self.engine
-        S, found = eng.schedule_b(S)
         N = int(S.cur.shape[0])
         cur, pc, tstatus = jax.device_get((S.cur, S.pc, S.tstatus))
         self.probes += 1
@@ -376,6 +446,12 @@ class TraceJitExecutor:
             if int(tstatus[i, c]) != ST_RUN:
                 continue
             groups.setdefault((keys[i], int(pc[i, c])), []).append(i)
+
+        if obs:
+            from repro.obs.metrics import n_bins, trace_spec_hist
+            hist = jnp.zeros(n_bins(eng.isa), jnp.int32)
+            deopts = jnp.int32(0)
+            iow0 = (S.tstatus == ST_IOWAIT).sum()
 
         cap = min(int(steps), TRACE_MAX)
         ns = jnp.zeros(N, jnp.int32)
@@ -405,9 +481,39 @@ class TraceJitExecutor:
                 ns = ns.at[ia].set(n_sub)
             eng.spec_steps_acc = eng.spec_steps_acc + n_sub.sum()
             eng.guard_exits_acc = eng.guard_exits_acc + guards.sum()
+            if obs:
+                hist = hist + trace_spec_hist(
+                    n_sub, tr.hist_prefix, tr.length, tr.loop_start
+                )
+                deopts = deopts + guards.sum().astype(jnp.int32)
 
+        if obs:
+            from repro.obs.metrics import zero_exec_aux
+            eng.ensure_obs()
+            S, tail_h = eng.finish_obs_b(S, steps - ns)
+            hist = (hist + tail_h.sum(0)).astype(jnp.int32)
+            iow1 = (S.tstatus == ST_IOWAIT).sum()
+            aux = zero_exec_aux(eng.isa)._replace(
+                op_hist=hist,
+                io_susp=(iow1 - iow0).astype(jnp.int32),
+                deopts=deopts,
+            )
+            return S, aux
         S = eng.finish_b(S, steps - ns)
-        return S, found
+        return S, None
+
+    # -- observability ---------------------------------------------------------
+
+    def ensure_obs(self):
+        """Phase hooks for the fleet's obs round (see
+        ``BatchedSliceExecutor.ensure_obs`` for the contract)."""
+        if hasattr(self, "obs_schedule"):
+            return
+        self.obs_schedule = self.engine.schedule_b
+        self.obs_execute = self._obs_execute
+
+    def _obs_execute(self, S: VMState, steps: int, found):
+        return self._execute_after_schedule(S, steps, obs=True)
 
     # -- single-node Executor protocol ----------------------------------------
 

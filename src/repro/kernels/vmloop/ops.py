@@ -43,6 +43,7 @@ def fleet_vmloop(
     *,
     mesh=None,
     interpret: bool = False,
+    obs: bool = False,
 ):
     """Advance every node of a stacked fleet state by at most ``steps``
     in-kernel instructions (bailing per node on unclaimed opcodes).
@@ -50,10 +51,13 @@ def fleet_vmloop(
     Returns ``(S', n_exec (N,) int32, bailed (N,) bool, bail_op (N,)
     int32)``; fields outside the kernel's CoreState (mailboxes, rng, ...)
     pass through untouched.  ``bail_op`` is -1 on non-bailed nodes, else
-    the declined opcode (``num_ops`` for FIOS/trap).
+    the declined opcode (``num_ops`` for FIOS/trap).  ``obs=True`` selects
+    the counting kernel and appends ``op_hist (N, num_ops + 4) int32``
+    (per-node retirement histogram, sharded like the other outputs).
     """
     core = core_of(S)
     N = core.pc.shape[0]
+    n_out = 5 if obs else 4
     if mesh is not None:
         ndev = int(np.prod(mesh.devices.shape))
         if ndev > 1 and N % ndev == 0:
@@ -61,18 +65,18 @@ def fleet_vmloop(
 
             ax = mesh.axis_names[0]
             sharded = shard_map(
-                lambda c: vmloop_call(c, steps, cfg, isa, interpret=interpret),
+                lambda c: vmloop_call(
+                    c, steps, cfg, isa, interpret=interpret, obs=obs
+                ),
                 mesh=mesh,
                 in_specs=(P(ax),),
-                out_specs=(P(ax), P(ax), P(ax), P(ax)),
+                out_specs=(P(ax),) * n_out,
                 check_rep=False,
             )
-            core, n_exec, bailed, bail_op = sharded(core)
-            return merge_core(S, core), n_exec, bailed, bail_op
-    core, n_exec, bailed, bail_op = vmloop_call(
-        core, steps, cfg, isa, interpret=interpret
-    )
-    return merge_core(S, core), n_exec, bailed, bail_op
+            core, *rest = sharded(core)
+            return (merge_core(S, core), *rest)
+    core, *rest = vmloop_call(core, steps, cfg, isa, interpret=interpret, obs=obs)
+    return (merge_core(S, core), *rest)
 
 
 __all__ = ["fleet_vmloop", "vmloop_ref"]

@@ -1079,7 +1079,7 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
     return step_instr, instr_supported
 
 
-def make_run_core(cfg: VMConfig, isa: ISA | None = None):
+def make_run_core(cfg: VMConfig, isa: ISA | None = None, obs: bool = False):
     """Returns ``run_core(core, tables, steps) -> (core, n_exec, bailed,
     bail_op)``: the fetch/dispatch/execute loop of Alg. 1, restricted to the
     claimed opcode set.  Stops on slice exhaustion, a status change
@@ -1087,11 +1087,51 @@ def make_run_core(cfg: VMConfig, isa: ISA | None = None):
     *before* executing it, so the host-side lax interpreter resumes from
     identical state.  ``bail_op`` is the opcode that caused the bail
     (clipped to ``num_ops`` for FIOS/trap), or -1 when the loop did not
-    bail — the raw feed for the per-opcode bail histogram."""
+    bail — the raw feed for the per-opcode bail histogram.
+
+    With ``obs=True`` the loop also carries a ``(num_ops + 4,)`` retirement
+    histogram (the ``repro.obs.metrics`` bin layout: ISA opcodes, then
+    fios/trap, lit, call, invalid) and returns it as a fifth output.  Only
+    *retired* steps are binned — the bailing instruction is not (the lax
+    tail retires and counts it), so kernel + tail histograms always sum to
+    exactly what a pure-lax slice would count."""
     isa = isa or get_isa()
     CS = cfg.cs_size
     num_ops = isa.num_ops
     step_instr, instr_supported = make_core_step(cfg, isa)
+
+    def bin_of(s: CoreState):
+        t = s.cur
+        pc = s.pc[t]
+        pc_ok = (pc >= 0) & (pc < CS)
+        instr = s.cs[jnp.clip(pc, 0, CS - 1)]
+        tag = instr & 3
+        payload = (instr >> 2).astype(I32)
+        b = jnp.where(tag == 0, jnp.clip(payload, 0, num_ops), num_ops + tag)
+        return jnp.where(pc_ok, b, num_ops + 3).astype(I32)
+
+    def run_core_obs(core: CoreState, tb: Tables, steps):
+        def cond(carry):
+            s, n, bailed, h = carry
+            return (n < steps) & (s.tstatus[s.cur] == ST_RUN) & (~bailed)
+
+        def body(carry):
+            s, n, bailed, h = carry
+            ok = instr_supported(s, tb)
+            h = h.at[bin_of(s)].add(jnp.where(ok, 1, 0).astype(I32))
+            s = lax.cond(ok, lambda x: step_instr(x, tb), lambda x: x, s)
+            return s, n + jnp.where(ok, 1, 0).astype(I32), ~ok, h
+
+        core, n, bailed, hist = lax.while_loop(
+            cond, body,
+            (core, jnp.int32(0), jnp.bool_(False),
+             jnp.zeros(num_ops + 4, I32)),
+        )
+        pc = core.pc[core.cur]
+        instr = core.cs[jnp.clip(pc, 0, CS - 1)]
+        payload = (instr >> 2).astype(I32)
+        bail_op = jnp.where(bailed, jnp.clip(payload, 0, num_ops), I32(-1))
+        return core, n, bailed, bail_op, hist
 
     def run_core(core: CoreState, tb: Tables, steps):
         def cond(carry):
@@ -1115,7 +1155,7 @@ def make_run_core(cfg: VMConfig, isa: ISA | None = None):
         bail_op = jnp.where(bailed, jnp.clip(payload, 0, num_ops), I32(-1))
         return core, n, bailed, bail_op
 
-    return run_core
+    return run_core_obs if obs else run_core
 
 
 def vmloop_ref(S: VMState, steps: int, cfg: VMConfig, isa: ISA | None = None):

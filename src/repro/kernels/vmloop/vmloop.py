@@ -39,7 +39,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.config import VMConfig
-from repro.core.vm.spec import ISA
+from repro.core.vm.spec import ISA, get_isa
 from repro.kernels import tpu_compiler_params
 from repro.kernels.vmloop.ref import (
     CORE_FIELDS,
@@ -68,6 +68,7 @@ def vmloop_call(
     isa: ISA | None = None,
     *,
     interpret: bool = False,
+    obs: bool = False,
 ):
     """Run the on-chip vmloop over a stacked (node-leading) ``CoreState``.
 
@@ -76,9 +77,18 @@ def vmloop_call(
     ``interpret=True`` lowers the kernel through the Pallas interpreter —
     the CPU-testable path the equivalence suite pins byte-exactly against
     the lax interpreter and the Oracle.
+
+    ``obs=True`` compiles the *counting* run_core variant: the kernel
+    additionally accumulates a per-node ``(num_ops + 4,)`` retirement
+    histogram in VMEM and emits it as a fifth result ``op_hist
+    (N, num_ops + 4) int32``.  This is a distinct kernel (extra output
+    block, extra carry in the while loop) — the default path is unchanged
+    and pays zero extra device outputs.
     """
+    isa = isa or get_isa()
     N = core.pc.shape[0]
-    run_core = make_run_core(cfg, isa)
+    run_core = make_run_core(cfg, isa, obs=obs)
+    nbins = isa.num_ops + 4
     # Constant dispatch + LUT tables ride along as (1, L_t) operands
     # replicated to every grid program (a kernel cannot capture array
     # constants); each table keeps its own length.
@@ -94,6 +104,9 @@ def vmloop_call(
     per_shape = {f: tuple(getattr(core2, f).shape[1:]) for f in CORE_FIELDS}
     out_fields = list(MUTATED_FIELDS) + ["n_exec", "bailed", "bail_op"]
     out_shape = {**per_shape, "n_exec": (1,), "bailed": (1,), "bail_op": (1,)}
+    if obs:
+        out_fields.append("op_hist")
+        out_shape["op_hist"] = (nbins,)
     n_core = len(CORE_FIELDS)
     n_tab = len(Tables._fields)
 
@@ -109,15 +122,21 @@ def vmloop_call(
             vals[f] = v
         st = CoreState(**vals)
         tb = Tables(*[r[...][0] for r in tab_refs])
-        st, n, bailed, bail_op = run_core(st, tb, steps)
+        if obs:
+            st, n, bailed, bail_op, hist = run_core(st, tb, steps)
+            out_refs[-1][0] = hist
+            scalar_refs = out_refs[-4:-1]
+        else:
+            st, n, bailed, bail_op = run_core(st, tb, steps)
+            scalar_refs = out_refs[-3:]
         for f, r in zip(MUTATED_FIELDS, out_refs):
             if f in SCALAR_FIELDS:
                 r[0, 0] = getattr(st, f)
             else:
                 r[0] = getattr(st, f)
-        out_refs[-3][0, 0] = n
-        out_refs[-2][0, 0] = jnp.where(bailed, 1, 0).astype(jnp.int32)
-        out_refs[-1][0, 0] = bail_op
+        scalar_refs[0][0, 0] = n
+        scalar_refs[1][0, 0] = jnp.where(bailed, 1, 0).astype(jnp.int32)
+        scalar_refs[2][0, 0] = bail_op
 
     tab_specs = [
         pl.BlockSpec((1, L), lambda i: (0, 0)) for L in tab_lens
@@ -142,7 +161,11 @@ def vmloop_call(
     n_exec = named.pop("n_exec")[:, 0]
     bailed = named.pop("bailed")[:, 0].astype(bool)
     bail_op = named.pop("bail_op")[:, 0]
+    op_hist = named.pop("op_hist") if obs else None
     for f in SCALAR_FIELDS:
         if f in named:
             named[f] = named[f][:, 0]
-    return core._replace(**named), n_exec, bailed, bail_op
+    core = core._replace(**named)
+    if obs:
+        return core, n_exec, bailed, bail_op, op_hist
+    return core, n_exec, bailed, bail_op

@@ -1,0 +1,40 @@
+"""Observability plane for the VM fleet runtime — one telemetry namespace.
+
+The paper claims a *robust, real-time capable* VM; the equivalence half of
+that claim is pinned by the byte-exact test suites, and this package
+supplies the real-time half: what did the fleet actually execute, how long
+did each round phase take, and did any node miss its deadline?  Three
+modules, mirroring the kernel three-file convention:
+
+``metrics.py``   — the counter schema: per-opcode instructions retired,
+                   mailbox high-watermark/drops, IO suspensions and
+                   deopt/bail events, accumulated as lazy device arrays and
+                   snapshotted by ``FleetVM.metrics()`` with identical keys
+                   under every executor;
+``tracing.py``   — the round-phase tracer: wall-clock span records per
+                   round phase (schedule → execute → router → io_service →
+                   warp) in a host ring buffer, exportable as Chrome
+                   trace-event JSON (``FleetVM.export_trace``);
+``deadline.py``  — the real-time monitor: a log-bucketed per-round latency
+                   histogram plus configurable round deadlines (virtual-
+                   clock misses counted per node on device, wall-clock
+                   misses counted on host).
+
+Observability is off by default and adds zero device outputs; enable it
+with ``FleetVM(..., obs=ObsConfig(...))`` (or ``obs=True``).
+"""
+
+from repro.obs.deadline import DeadlineMonitor
+from repro.obs.metrics import ExecAux, FleetMetrics, ObsConfig, ObsCounters
+from repro.obs.tracing import RoundTracer, export_chrome_trace, validate_chrome_trace
+
+__all__ = [
+    "DeadlineMonitor",
+    "ExecAux",
+    "FleetMetrics",
+    "ObsConfig",
+    "ObsCounters",
+    "RoundTracer",
+    "export_chrome_trace",
+    "validate_chrome_trace",
+]

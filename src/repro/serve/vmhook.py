@@ -58,6 +58,7 @@ class FleetServeMonitor:
         rounds_per_step: int = 8,
         mesh=None,
         executor: str = "batched",
+        obs=None,
     ):
         self.cfg = cfg or VMConfig()
         self.rounds_per_step = rounds_per_step
@@ -66,8 +67,10 @@ class FleetServeMonitor:
         # reporting nodes' slices.  ``executor`` picks the slice engine —
         # with ``"trace"``, the monitor nodes (typically all running the
         # same measuring job) collapse into one program group and the
-        # per-group stats land in ``trace_stats()``.
-        self.fleet = FleetVM(self.cfg, n=n, mesh=mesh, executor=executor)
+        # per-group stats land in ``trace_stats()``.  ``obs`` turns on the
+        # monitor fleet's own telemetry plane (``True`` or an
+        # :class:`repro.obs.ObsConfig`), surfaced via :meth:`metrics`.
+        self.fleet = FleetVM(self.cfg, n=n, mesh=mesh, executor=executor, obs=obs)
         self._frames = []
         for node in self.fleet.nodes:
             node.dios_add("stats", np.zeros(self.STATS_CELLS, np.int32))
@@ -100,3 +103,10 @@ class FleetServeMonitor:
         exits, specialized-step fraction, and per-program-group slice
         counts."""
         return self.fleet.trace_stats()
+
+    def metrics(self):
+        """The monitor fleet's :class:`repro.obs.FleetMetrics` — the
+        measuring jobs' own retirement counters, mailbox pressure, and
+        round latency, so the observer's cost is itself observable.
+        Schema-stable whether or not ``obs`` was enabled."""
+        return self.fleet.metrics()

@@ -307,8 +307,20 @@ class TestTraceFleet:
         assert next(iter(grown.values())) % n == 0
 
     def test_trace_stats_zero_for_other_executors(self):
+        # Schema-stable under every backend (PR 8): the full key set with
+        # zeroed values, not a truncated dict.
         fleet = FleetVM(CFG, n=2)
-        assert fleet.trace_stats() == {"executor": "batched"}
+        stats = fleet.trace_stats()
+        assert stats["executor"] == "batched"
+        assert stats["traces_recorded"] == 0
+        assert stats["traces_compiled"] == 0
+        assert stats["spec_steps"] == 0
+        assert stats["guard_exits"] == 0
+        assert stats["total_steps"] == 0
+        assert stats["specialized_frac"] == 0.0
+        assert stats["groups"] == {}
+        trace_keys = set(FleetVM(CFG, n=2, executor="trace").trace_stats())
+        assert set(stats) == trace_keys
 
 
 # ---------------------------------------------------------------------------
