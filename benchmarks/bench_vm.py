@@ -10,7 +10,11 @@ the fused ``rounds_aux`` fast path, rounds/s + msgs/s;
 gated in CI at bailed_frac < 5%).  ``vm_fleet64_obs_overhead`` measures the
 telemetry plane (PR 8): obs-on vs obs-off steps/s on the pallas ring
 (CI-gated < 5% overhead), round-latency percentiles, deadline misses, and a
-Chrome trace-event export validated and uploaded as a CI artifact."""
+Chrome trace-event export validated and uploaded as a CI artifact.
+``vm_fleet64_exec`` measures the Executive (PR 9): tasks/s and context
+switches/s on a multi-task 64-node fleet, plus the vectorized-vs-per-node
+syscall service comparison (CI-gated: one batched handler call per syscall
+wave, not O(nodes) Python callbacks)."""
 
 from __future__ import annotations
 
@@ -481,6 +485,77 @@ def bench_fleet_trace(n: int = 64, network_steps_per_s: float | None = None):
     return results["trace"], results["batched"], stats
 
 
+def bench_fleet_exec(n: int = 64):
+    """Executive fleet: every node time-slices a boot daemon plus two
+    spawned tasks (a syscall-chatty worker and a compute job) through the
+    preemptive priority scheduler, while a fleet-shared ``tick`` syscall is
+    serviced by the vectorized SVC plane — one batched handler invocation
+    per syscall wave instead of one Python callback per node.  The row
+    reports tasks/s and context switches/s plus the batched-vs-per-node
+    syscall service comparison (same movement, same bytes; only the host
+    dispatch differs), which is the CI gate's proof that the vector plane
+    replaced O(nodes) FIOS dispatch."""
+    from repro.exec import Executive, ExecutiveConfig
+
+    cfg = VMConfig(cs_size=2048, steps_per_slice=64)
+    ecfg = ExecutiveConfig(quantum=16, slices=4)
+    WAVES = 4
+    MAIN = ": d 0 begin 1+ dup 300 >= until drop ; d halt"
+    WORKER = f"0 {WAVES} 0 do tick loop drop"
+    COMPUTE = ": c 0 begin 1+ dup 200 >= until drop ;\nc"
+
+    def handler_vec(rows, svc):
+        return [r.args[0] + 1 for r in rows]
+
+    def handler_scalar(v):
+        return v + 1
+
+    def build(vectorized: bool) -> tuple[FleetVM, object]:
+        fleet = FleetVM(cfg, n=n, executor="batched", executive=ecfg)
+        ex = Executive(fleet)
+        fn = handler_vec if vectorized else handler_scalar
+        for i, node in enumerate(fleet.nodes):
+            node.svc_add("tick", fn, args=1, ret=1, vectorized=vectorized)
+            node.launch(node.load(MAIN))
+            ex.spawn(i, WORKER, prio=1)
+            ex.spawn(i, COMPUTE, prio=0)
+        return fleet, ex
+
+    build(True)[0].run(max_rounds=4)            # warm the compiled round
+    legs = {}
+    for vectorized in (True, False):
+        fleet, ex = build(vectorized)
+        t0 = time.perf_counter()
+        res = fleet.run(max_rounds=600)
+        dt = time.perf_counter() - t0
+        e = fleet.executive_stats()
+        legs[vectorized] = (fleet, res, e, dt)
+    fleet, res, e, dt = legs[True]
+    _, _, e_s, dt_s = legs[False]
+    tasks = n + e["spawns_admitted"]            # boot daemons + spawned
+    assert e["svc_batches"] > 0 and e["svc_scalar_calls"] == 0
+    assert e_s["svc_scalar_calls"] == e_s["syscalls"] > 0
+    METRICS["vm_fleet64_exec"] = {
+        "nodes": n,
+        "tasks": tasks,
+        "tasks_per_s": tasks / dt,
+        "task_switches": e["task_switches"],
+        "switches_per_s": e["task_switches"] / dt,
+        "preemptions": e["preemptions"],
+        "steps_per_s": int(res.steps.sum()) / dt,
+        "rounds": res.rounds,
+        "syscalls": e["syscalls"],
+        "svc_batches": e["svc_batches"],
+        "svc_services": fleet.io_service.services,
+        "scalar_calls_baseline": e_s["svc_scalar_calls"],
+        "vector_us_per_syscall": dt * 1e6 / max(e["syscalls"], 1),
+        "scalar_us_per_syscall": dt_s * 1e6 / max(e_s["syscalls"], 1),
+        "quantum": ecfg.quantum,
+        "slices_per_round": ecfg.slices,
+    }
+    return METRICS["vm_fleet64_exec"]
+
+
 def bench_fleet_io(n: int = 8, n_suspended: int = 2) -> tuple[int, int]:
     """The partial-IO win: ``n_suspended`` of ``n`` nodes block on a FIOS
     call while the rest compute.  Returns IO-service bytes for the
@@ -596,6 +671,16 @@ def run() -> list[tuple[str, float, str]]:
                  f"same workload ({t_stats['specialized_frac']:.1%} "
                  f"specialized, {t_stats['guard_exits']} guard exits, "
                  f"{t_stats['traces_compiled']} traces compiled)"))
+    me = bench_fleet_exec(64)
+    rows.append(("vm_fleet64_exec", 1.0 / me["tasks_per_s"],
+                 f"{me['tasks_per_s']:.0f} tasks/s, "
+                 f"{me['switches_per_s']:.0f} context switches/s on the "
+                 f"64-node Executive fleet ({me['tasks']} tasks, "
+                 f"{me['preemptions']} preemptions; {me['syscalls']} "
+                 f"syscalls in {me['svc_batches']} vectorized batches vs "
+                 f"{me['scalar_calls_baseline']} per-node callbacks: "
+                 f"{me['vector_us_per_syscall']:.0f} vs "
+                 f"{me['scalar_us_per_syscall']:.0f} us/syscall)"))
     p_bytes, fs_bytes = bench_fleet_io(8, 2)
     rows.append(("vm_fleet_io_partial", float(p_bytes),
                  f"{p_bytes} B partial-state IO service vs {fs_bytes} B "

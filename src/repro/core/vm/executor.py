@@ -172,6 +172,24 @@ class BatchedSliceExecutor:
         )
         self.obs_execute = jax.jit(exec_b, static_argnames=("steps",))
 
+    # -- Executive (lazy: zero cost unless the fleet schedules tasks) --------
+
+    def ensure_exec(self):
+        """Build the Executive micro-slice: ``run_slice_exec_batched(S,
+        quantum) -> (S, found, switched, preempted)`` — the vmapped
+        ``interp.run_slice_exec_fn`` (priority scheduler + per-quantum
+        preemption counters)."""
+        if hasattr(self, "run_slice_exec_batched"):
+            return
+        import jax
+
+        single = self.interp.run_slice_exec_fn
+
+        def exec_b(S: VMState, steps: int):
+            return jax.vmap(lambda s: single(s, steps))(S)
+
+        self.run_slice_exec_batched = jax.jit(exec_b, static_argnames=("steps",))
+
 
 class _PallasEngine(NamedTuple):
     """Jitted batched-slice functions shared by every PallasSliceExecutor
@@ -180,6 +198,9 @@ class _PallasEngine(NamedTuple):
 
     plain: Callable      # (S, steps) -> (S, found)
     aux: Callable        # (S, steps) -> (S, found, n_exec, bailed, bail_op)
+    exec_aux: Callable   # Executive micro-slice:
+                         # (S, steps) -> (S, found, switched, preempted,
+                         #                n_exec, bailed, bail_op)
 
 
 def _build_pallas_engine(
@@ -243,7 +264,29 @@ def _build_pallas_engine(
         return S, found
 
     plain = jax.jit(batched, static_argnames=("steps",))
-    return _PallasEngine(plain=plain, aux=aux)
+
+    schedule_prio = interp._schedule_prio
+
+    def batched_exec_aux(S: VMState, steps: int):
+        # The Executive micro-slice: same kernel + lax-tail motion as
+        # batched_aux, but scheduled by priority/round-robin and reporting
+        # the task-level counters.  `task`-class words still bail to the
+        # tail; the bail lands on the same state under every engine.
+        prev = S.cur
+        S, found = jax.vmap(schedule_prio)(S)
+        switched = (found & (S.cur != prev)).astype(jnp.int32)
+        S, n_exec, bailed, bail_op = fleet_vmloop(
+            S, steps, cfg, isa, mesh=mesh, interpret=interpret
+        )
+        S = jax.vmap(vmloop_rest)(S, steps - n_exec)
+        preempted = jax.vmap(
+            lambda s: (s.tstatus[s.cur] == ST_RUN).astype(jnp.int32)
+        )(S)
+        S = jax.vmap(preempt)(S)
+        return S, found, switched, preempted, n_exec, bailed, bail_op
+
+    exec_aux = jax.jit(batched_exec_aux, static_argnames=("steps",))
+    return _PallasEngine(plain=plain, aux=aux, exec_aux=exec_aux)
 
 
 @functools.lru_cache(maxsize=16)
@@ -367,6 +410,7 @@ class PallasSliceExecutor:
         engine = get_pallas_engine(cfg, isa, mesh, interpret)
         self.run_slice_batched = engine.plain
         self.run_slice_batched_aux = engine.aux
+        self.run_slice_exec_batched_aux = engine.exec_aux
         self.obs = normalize_obs(obs)
         self.op_hist = None
         if self.obs is not None:
@@ -516,6 +560,25 @@ class OracleFleetExecutor:
         for i, st in enumerate(states):
             states[i], founds[i] = self.oracle.run_slice(st, steps)
         return self._restack(states), jnp.asarray(founds)
+
+    def run_slice_exec_batched(self, S: VMState, steps: int):
+        """Executive micro-slice through the reference interpreter."""
+        import jax.numpy as jnp
+        states = self._host_nodes(S)
+        n = len(states)
+        founds = np.zeros(n, bool)
+        switched = np.zeros(n, np.int32)
+        preempted = np.zeros(n, np.int32)
+        for i, st in enumerate(states):
+            states[i], founds[i], switched[i], preempted[i] = (
+                self.oracle.run_slice_exec(st, steps)
+            )
+        return (
+            self._restack(states),
+            jnp.asarray(founds),
+            jnp.asarray(switched),
+            jnp.asarray(preempted),
+        )
 
     # -- observability -------------------------------------------------------
 

@@ -57,6 +57,7 @@ from repro.core.vm.spec import (
     ST_DONE,
     ST_ERR,
     ST_EVENT,
+    ST_FREE,
     ST_HALT,
     ST_IOWAIT,
     ST_SLEEP,
@@ -113,11 +114,13 @@ class FleetKernels:
         isa: ISA | None = None,
         mesh=None,
         executor: str = "batched",
+        executive=None,
     ):
         self.cfg = cfg
         self.isa = isa or get_isa()
         self.mesh = mesh
         self.executor_kind = executor
+        self.executive = executive     # ExecutiveConfig | None
         if executor == "pallas":
             from repro.core.vm.executor import PallasSliceExecutor
             self.executor = PallasSliceExecutor(cfg, isa, mesh=mesh)
@@ -138,6 +141,7 @@ class FleetKernels:
         self.interp = self.executor.interp
         self._obs_kernels = None
         self._build()
+        self._build_exec()
 
     def _build(self):
         cfg = self.cfg
@@ -189,6 +193,8 @@ class FleetKernels:
             S = S._replace(now=S.now + inc)
             S, progress = route(constrain(S))
             return warp_fn(S, progress)
+
+        self._post_slice = post_slice
 
         if getattr(self.executor, "host_driven", False):
             # Trace-JIT engine: the slice itself is host-orchestrated (a
@@ -262,6 +268,104 @@ class FleetKernels:
         else:
             self.round_aux = None
             self.rounds_aux = None
+
+    def _build_exec(self):
+        """Build ``round_exec`` — one fleet round under the Executive.
+
+        ``ExecutiveConfig.slices`` micro-slices of ``quantum`` instructions
+        each (priority schedule -> vmloop -> preempt per sub-slice), then
+        the ordinary post-slice (clock once per round, router, warp).  The
+        uniform return is ``(S, task_switches, preemptions, kernel_steps,
+        bailed, bail_hist)`` — zeros where an engine has no kernel
+        telemetry — so ``FleetVM.run`` accumulates one way for all four
+        executors.  ``None`` when no Executive was configured: the plain
+        round is untouched.
+        """
+        ecfg = self.executive
+        if ecfg is None:
+            self.round_exec = None
+            return
+        from jax import lax
+
+        nops = self.isa.num_ops
+        q, k = ecfg.quantum, ecfg.slices
+        constrain = self._constrain
+        post_slice = self._post_slice
+        ex = self.executor
+
+        if getattr(ex, "host_driven", False):
+            # Trace/oracle engines orchestrate each micro-slice from the
+            # host; the post-slice layers stay jitted.
+            post = jax.jit(post_slice)
+
+            def round_exec_host(S: VMState):
+                steps0 = S.steps
+                sw = jnp.int32(0)
+                pe = jnp.int32(0)
+                for _ in range(k):
+                    S, _, sw_i, pe_i = ex.run_slice_exec_batched(S, q)
+                    sw = sw + sw_i.sum()
+                    pe = pe + pe_i.sum()
+                S = post(S, steps0)
+                return S, sw, pe, jnp.int32(0), jnp.int32(0), jnp.zeros(
+                    nops + 1, I32
+                )
+
+            self.round_exec = round_exec_host
+            return
+
+        if self.executor_kind == "pallas":
+            exec_aux = ex.run_slice_exec_batched_aux
+
+            def sub_slice(S: VMState):
+                S, _, sw, pe, n_exec, bailed, bail_op = exec_aux(S, q)
+                hist = jnp.zeros(nops + 1, I32).at[
+                    jnp.clip(bail_op, 0, nops)
+                ].add(bailed.astype(I32))
+                return (
+                    S,
+                    sw.sum(),
+                    pe.sum(),
+                    n_exec.sum().astype(I32),
+                    bailed.astype(I32).sum(),
+                    hist,
+                )
+        else:
+            ex.ensure_exec()
+            exec_b = ex.run_slice_exec_batched
+
+            def sub_slice(S: VMState):
+                S, _, sw, pe = exec_b(S, q)
+                return (
+                    S,
+                    sw.sum(),
+                    pe.sum(),
+                    jnp.int32(0),
+                    jnp.int32(0),
+                    jnp.zeros(nops + 1, I32),
+                )
+
+        def round_exec(S: VMState):
+            S = constrain(S)
+            steps0 = S.steps
+
+            def body(_, carry):
+                S, sw_s, pe_s, ne_s, bl_s, hist_s = carry
+                S, sw, pe, ne, bl, hist = sub_slice(S)
+                return (
+                    S, sw_s + sw, pe_s + pe, ne_s + ne, bl_s + bl,
+                    hist_s + hist,
+                )
+
+            init = (
+                S, jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                jnp.zeros(nops + 1, I32),
+            )
+            S, sw, pe, ne, bl, hist = lax.fori_loop(0, k, body, init)
+            S = post_slice(S, steps0)
+            return S, sw, pe, ne, bl, hist
+
+        self.round_exec = jax.jit(round_exec)
 
     def obs(self) -> "_ObsKernels":
         """Lazy phased-round kernels for the observability plane.
@@ -357,18 +461,21 @@ class _ObsKernels:
 
 
 @functools.lru_cache(maxsize=8)
-def _get_fleet_kernels(cfg: VMConfig, mesh, executor: str) -> FleetKernels:
-    return FleetKernels(cfg, mesh=mesh, executor=executor)
+def _get_fleet_kernels(
+    cfg: VMConfig, mesh, executor: str, executive
+) -> FleetKernels:
+    return FleetKernels(cfg, mesh=mesh, executor=executor, executive=executive)
 
 
 def get_fleet_kernels(
-    cfg: VMConfig, mesh=None, executor: str = "batched"
+    cfg: VMConfig, mesh=None, executor: str = "batched", executive=None
 ) -> FleetKernels:
     """Fleet kernels are expensive to trace — share per (VMConfig, mesh,
-    executor).  Normalizes the optional mesh so ``f(cfg)`` and
+    executor, executive).  Normalizes the optional mesh so ``f(cfg)`` and
     ``f(cfg, None)`` hit the same cache entry (EnsembleVM and FleetVM must
-    share kernels)."""
-    return _get_fleet_kernels(cfg, mesh, executor)
+    share kernels).  ``executive`` (a frozen ``ExecutiveConfig``) keys the
+    Executive round variant like any other compiled artifact."""
+    return _get_fleet_kernels(cfg, mesh, executor, executive)
 
 
 # ---------------------------------------------------------------------------
@@ -410,11 +517,23 @@ class FleetVM:
     (see module doc).  Host IO (FIOS calls, ``out``/``in``) is detected by a
     cheap per-round status probe and serviced by the partial-state
     :class:`~repro.core.vm.ios.FleetIOService` (``io_mode="partial"``,
-    the default) which moves only the suspended nodes' slices, or by PR 1's
-    full sync+push (``io_mode="full"``, kept for byte-count comparison).
-    ``h2d``/``d2h`` count full-state syncs; ``h2d_bytes``/``d2h_bytes``
-    count all bytes moved either way; ``io_h2d_bytes``/``io_d2h_bytes``
-    count just the IO-service share.
+    the default) which moves only the suspended nodes' slices; by the
+    vectorized syscall plane (``io_mode="vector"`` —
+    :class:`~repro.exec.syscalls.VectorSyscallService`, same partial
+    movement but ONE batched handler call per distinct syscall number
+    instead of one Python callback per node; the default when an
+    ``executive`` is set); or by PR 1's full sync+push (``io_mode="full"``,
+    kept for byte-count comparison).  ``h2d``/``d2h`` count full-state
+    syncs; ``h2d_bytes``/``d2h_bytes`` count all bytes moved either way;
+    ``io_h2d_bytes``/``io_d2h_bytes`` count just the IO-service share.
+
+    ``executive`` (an :class:`~repro.exec.executive.ExecutiveConfig`)
+    switches the round to the Executive shape: ``slices`` preemptive
+    micro-slices of ``quantum`` instructions each, dispatched by the
+    priority scheduler (class, then ``prio``, then round-robin rotation),
+    with the clock/router/warp tail once per round.  Spawn tasks through
+    :class:`~repro.exec.executive.Executive`; telemetry lands in
+    ``executive_stats()`` / ``metrics()["executive"]``.
 
     ``executor`` selects the per-node slice engine: ``"batched"`` (vmapped
     lax interpreter, the default), ``"pallas"`` (the on-chip
@@ -433,9 +552,10 @@ class FleetVM:
         seed: int = 1,
         nodes: list[REXAVM] | None = None,
         mesh=None,
-        io_mode: str = "partial",
+        io_mode: str | None = None,
         executor: str = "batched",
         obs=None,
+        executive=None,
     ):
         if nodes is not None:
             assert len(nodes) >= 1
@@ -450,7 +570,19 @@ class FleetVM:
                 REXAVM(self.cfg, backend="jit", lookup=lookup, seed=seed + i)
                 for i in range(n)
             ]
-        if io_mode not in ("partial", "full"):
+        if executive is not None and obs is not None:
+            # The obs plane's phased round and the Executive's sub-sliced
+            # round are distinct round shapes; composing them is a ROADMAP
+            # follow-up, not a silent half-measure.
+            raise ValueError(
+                "executive and obs are mutually exclusive; Executive "
+                "counters are reported via metrics()['executive'] instead"
+            )
+        self.executive = executive      # ExecutiveConfig | None
+        if io_mode is None:
+            # Executive fleets default to the batched syscall plane.
+            io_mode = "vector" if executive is not None else "partial"
+        if io_mode not in ("partial", "full", "vector"):
             raise ValueError(f"unknown io_mode {io_mode!r}")
         self.io_mode = io_mode
         self.n = len(self.nodes)
@@ -472,15 +604,19 @@ class FleetVM:
         # The cached kernels are built for the default ISA; a custom-ISA
         # fleet needs its own build (opcode numbering differs).
         if isa is get_isa():
-            self.kernels = get_fleet_kernels(self.cfg, mesh, executor)
+            self.kernels = get_fleet_kernels(self.cfg, mesh, executor, executive)
         else:
-            self.kernels = FleetKernels(self.cfg, isa, mesh, executor)
+            self.kernels = FleetKernels(self.cfg, isa, mesh, executor, executive)
         self.executor_kind = executor
         self._op_send = isa.opcode["send"]
         self._op_recv = isa.opcode["receive"]
         self._S: VMState | None = None     # device-resident stacked state
-        from repro.core.vm.ios import FleetIOService
-        self.io_service = FleetIOService(self.nodes)
+        if io_mode == "vector":
+            from repro.exec.syscalls import VectorSyscallService
+            self.io_service = VectorSyscallService(self.nodes)
+        else:
+            from repro.core.vm.ios import FleetIOService
+            self.io_service = FleetIOService(self.nodes)
         self.h2d = 0                       # full-state host -> device syncs
         self.d2h = 0                       # full-state device -> host syncs
         self.h2d_bytes = 0                 # all bytes host -> device
@@ -500,6 +636,19 @@ class FleetVM:
         )
         self._trace_steps_total = 0        # instrs executed across run()s
         self.rounds_total = 0              # fleet rounds across run()s
+        # Executive telemetry (device-side lazy accumulators like the
+        # pallas ones; see executive_stats()).
+        self._task_switches_acc = 0        # dispatches to a different slot
+        self._preempts_acc = 0             # quanta exhausted while ST_RUN
+        self._exec_slices = 0              # Executive micro-slices driven
+        self._spawns_admitted = 0          # Executive.spawn admissions
+        self._spawns_rejected = 0
+        # Sticky per-(node, task-slot) deadline-miss flags, cleared when a
+        # slot frees; total counts each occupancy's first miss once.
+        self._deadline_missed = np.zeros(
+            (self.n, self.cfg.max_tasks), bool
+        )
+        self._task_deadline_miss_total = 0
         # Observability plane (repro.obs): fully off by default — no extra
         # device outputs, no per-phase syncs, nothing accumulated.
         from repro.obs.metrics import normalize_obs
@@ -570,6 +719,11 @@ class FleetVM:
             "bailed_frac": fallback / total if total else 0.0,
             "bailed_node_rounds": int(self._bailed_acc),
             "bail_hist": bail_hist,
+            # Executive micro-slices the kernel engine drove (zero under
+            # every other executor and when no Executive is configured).
+            "exec_slices": (
+                int(self._exec_slices) if self.executor_kind == "pallas" else 0
+            ),
         }
 
     def trace_stats(self) -> dict:
@@ -588,6 +742,7 @@ class FleetVM:
                 "total_steps": 0,
                 "specialized_frac": 0.0,
                 "groups": {},
+                "exec_slices": 0,
             }
         now = self.kernels.executor.stats()
         base = self._trace0
@@ -602,12 +757,46 @@ class FleetVM:
             "total_steps": total,
             "specialized_frac": spec / total if total else 0.0,
             "groups": now["groups"],
+            # Executive micro-slices this (trace) engine drove.
+            "exec_slices": int(self._exec_slices),
+        }
+
+    def executive_stats(self) -> dict:
+        """Executive + syscall-plane telemetry, schema-stable: the same
+        keys come back zeroed when no Executive is configured and under
+        the per-node ``FleetIOService`` (where ``svc_batches`` has no
+        meaning).  ``task_switches``/``preemptions`` are the device-side
+        accumulators of the Executive round; ``task_deadline_misses``
+        counts each task-slot occupancy's first virtual-clock deadline
+        miss; ``svc_batches`` vs ``svc_scalar_calls`` is the vectorized-
+        service proof (one handler call per distinct syscall per service,
+        not one Python callback per node)."""
+        svc = self.io_service
+        ecfg = self.executive
+        return {
+            "executor": self.executor_kind,
+            "enabled": ecfg is not None,
+            "quantum": int(ecfg.quantum) if ecfg else 0,
+            "slices_per_round": int(ecfg.slices) if ecfg else 0,
+            "exec_slices": int(self._exec_slices),
+            "task_switches": int(self._task_switches_acc),
+            "preemptions": int(self._preempts_acc),
+            "spawns_admitted": int(self._spawns_admitted),
+            "spawns_rejected": int(self._spawns_rejected),
+            "task_deadline_misses": int(self._task_deadline_miss_total),
+            "tasks_missed": int(self._deadline_missed.sum()),
+            "syscalls": int(getattr(svc, "syscalls", 0)),
+            "svc_batches": int(getattr(svc, "svc_batches", 0)),
+            "svc_scalar_calls": int(getattr(svc, "scalar_calls", 0)),
+            "svc_posts": int(getattr(svc, "posts", 0)),
+            "svc_post_drops": int(getattr(svc, "post_drops", 0)),
         }
 
     def transfer_stats(self) -> dict:
         """All movement counters in one dict (serve monitor / benchmarks),
         self-describing: ``executor`` and ``rounds`` identify which engine
         moved these bytes over how many fleet rounds."""
+        svc = self.io_service
         return {
             "executor": self.executor_kind,
             "rounds": self.rounds_total,
@@ -615,10 +804,14 @@ class FleetVM:
             "d2h": self.d2h,
             "h2d_bytes": self.h2d_bytes,
             "d2h_bytes": self.d2h_bytes,
-            "io_services": self.io_service.services,
-            "io_nodes_serviced": self.io_service.nodes_serviced,
-            "io_h2d_bytes": self.io_service.h2d_bytes,
-            "io_d2h_bytes": self.io_service.d2h_bytes,
+            "io_services": svc.services,
+            "io_nodes_serviced": svc.nodes_serviced,
+            "io_h2d_bytes": svc.h2d_bytes,
+            "io_d2h_bytes": svc.d2h_bytes,
+            # Syscall-plane shape of the same movement: zeroed under the
+            # per-node FleetIOService, populated by VectorSyscallService.
+            "io_syscalls": int(getattr(svc, "syscalls", 0)),
+            "io_svc_batches": int(getattr(svc, "svc_batches", 0)),
             "probes": self.probes,
         }
 
@@ -666,6 +859,8 @@ class FleetVM:
         transfers = self.transfer_stats()
         transfers.pop("executor", None)
         transfers.pop("rounds", None)
+        executive = self.executive_stats()
+        executive.pop("executor", None)
         return FleetMetrics(
             executor=self.executor_kind,
             rounds=self.rounds_total,
@@ -674,6 +869,7 @@ class FleetVM:
             pallas=pallas,
             trace=trace,
             transfers=transfers,
+            executive=executive,
         )
 
     def export_trace(self, path=None):
@@ -729,20 +925,33 @@ class FleetVM:
 
     # -- execution -------------------------------------------------------------
 
-    def _probe(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _probe(self):
         """Cheap device->host peek at scheduler-visible state (not a full sync)."""
         self.probes += 1
-        # One batched fetch: three separate np.asarray calls would each block
-        # on their own device round trip.
-        return jax.device_get((self._S.tstatus, self._S.io_op, self._S.steps))
+        # One batched fetch: separate np.asarray calls would each block on
+        # their own device round trip.  now/deadline ride along for the
+        # Executive's deadline-miss accounting (same rows, negligible bytes).
+        return jax.device_get(
+            (
+                self._S.tstatus,
+                self._S.io_op,
+                self._S.steps,
+                self._S.now,
+                self._S.deadline,
+            )
+        )
 
     def _service_host_io(self, node_mask: np.ndarray) -> bool:
         """Service host-IO suspensions of the masked nodes.
 
         ``partial`` gathers/scatters only those nodes' slices through
-        :class:`FleetIOService`; ``full`` is PR 1's whole-state sync + push.
+        :class:`FleetIOService`; ``vector`` does the same movement but
+        executes FIOS suspensions through the batched syscall plane
+        (:class:`~repro.exec.syscalls.VectorSyscallService` — one handler
+        call per distinct syscall number, not one per node); ``full`` is
+        PR 1's whole-state sync + push.
         """
-        if self.io_mode == "partial":
+        if self.io_mode in ("partial", "vector"):
             svc = self.io_service
             d2h0, h2d0 = svc.d2h_bytes, svc.h2d_bytes
             self._S, progress = svc.service(
@@ -844,12 +1053,26 @@ class FleetVM:
         last_steps_sum = -1
         round_aux = self.kernels.round_aux
         rounds_aux = self.kernels.rounds_aux
+        round_exec = self.kernels.round_exec if self.executive else None
         while rounds < max_rounds:
             if self.obs is not None:
                 # Observed rounds run phased (counters, spans, deadlines);
                 # message-bound chunking is bypassed so every round is
                 # individually accounted.
                 self._round_obs(steps)
+                rounds += 1
+            elif round_exec is not None:
+                # Executive round: ExecutiveConfig.slices preemptive
+                # micro-slices of .quantum instructions (priority schedule
+                # per sub-slice), clock/router/warp once.  Task/kernel
+                # telemetry accumulates lazily on device.
+                self._S, sw, pe, ne, bl, hist = round_exec(self._S)
+                self._task_switches_acc = self._task_switches_acc + sw
+                self._preempts_acc = self._preempts_acc + pe
+                self._kernel_steps_acc = self._kernel_steps_acc + ne
+                self._bailed_acc = self._bailed_acc + bl
+                self._bail_hist_acc = self._bail_hist_acc + hist
+                self._exec_slices += self.executive.slices
                 rounds += 1
             elif rounds_aux is not None and service_every > 1:
                 # Message-bound round mode: probe only at chunk boundaries.
@@ -871,7 +1094,22 @@ class FleetVM:
                 rounds += 1
             if rounds % service_every != 0 and rounds < max_rounds:
                 continue
-            tstatus, io_op, steps_now = self._probe()
+            tstatus, io_op, steps_now, now_v, deadline_v = self._probe()
+            if self.executive is not None:
+                # Task-level deadline misses: a live slot whose virtual
+                # clock has run past its (nonzero) deadline.  The sticky
+                # flag counts each slot occupancy's first miss once and
+                # clears when the slot frees.
+                active = tstatus != ST_FREE
+                missed_now = (
+                    (deadline_v > 0) & (now_v[:, None] > deadline_v) & active
+                )
+                self._task_deadline_miss_total += int(
+                    (missed_now & ~self._deadline_missed).sum()
+                )
+                self._deadline_missed = (
+                    self._deadline_missed | missed_now
+                ) & active
             host_io = (
                 (tstatus == ST_IOWAIT)
                 & (io_op != 0)
@@ -918,8 +1156,25 @@ class FleetVM:
 # Host-routed reference (the operational specification of one fleet round)
 # ---------------------------------------------------------------------------
 
+_REF_ORACLES: dict = {}
+
+
+def _reference_oracle(cfg: VMConfig, isa: ISA):
+    """Shared plain-Python Oracle for reference_round's Executive mirror
+    (the fleet nodes' own executors are typically jit-backed)."""
+    from repro.core.vm.oracle import Oracle
+
+    key = (cfg, id(isa))
+    if key not in _REF_ORACLES:
+        _REF_ORACLES[key] = Oracle(cfg, isa)
+    return _REF_ORACLES[key]
+
+
 def reference_round(
-    nodes: list[REXAVM], steps: int | None = None, obs: dict | None = None
+    nodes: list[REXAVM],
+    steps: int | None = None,
+    obs: dict | None = None,
+    executive=None,
 ) -> list[bool]:
     """One fleet round over independent host-looped REXAVMs.
 
@@ -933,7 +1188,14 @@ def reference_round(
     ``obs``, when given, is a dict the round's router counters accumulate
     into — ``drops`` (messages to out-of-range destinations) and
     ``depth_peak`` (deepest mailbox after the send phase) — the reference
-    semantics for ``ObsCounters.mbox_drops``/``mbox_high``.
+    semantics for ``ObsCounters.mbox_drops``/``mbox_high``; under an
+    Executive it additionally grows ``task_switches``/``preemptions``.
+
+    ``executive`` (an :class:`repro.exec.executive.ExecutiveConfig`) mirrors
+    :meth:`FleetKernels._build_exec`: ``slices`` preemptive micro-slices of
+    ``quantum`` instructions each through the plain-Python Oracle's
+    priority scheduler, with the virtual clock advanced ONCE per round from
+    the round's total executed instructions.
     """
     cfg = nodes[0].cfg
     isa = nodes[0].isa
@@ -942,13 +1204,35 @@ def reference_round(
     op_send, op_recv = isa.opcode["send"], isa.opcode["receive"]
     steps = steps or cfg.steps_per_slice
 
-    for vm in nodes:
-        before = int(vm.state.steps)
-        vm._slice(steps)
-        executed = int(vm.state.steps) - before
-        vm.state.now[...] = int(vm.state.now) + max(
-            1, executed * cfg.us_per_instr // 1000
-        )
+    if executive is not None:
+        oracle = _reference_oracle(cfg, isa)
+        for vm in nodes:
+            st = vm.state
+            before = int(st.steps)
+            for _ in range(executive.slices):
+                st, found, switched, preempted = oracle.run_slice_exec(
+                    st, executive.quantum
+                )
+                if obs is not None:
+                    obs["task_switches"] = (
+                        obs.get("task_switches", 0) + int(switched)
+                    )
+                    obs["preemptions"] = (
+                        obs.get("preemptions", 0) + int(preempted)
+                    )
+            vm.state = st
+            executed = int(st.steps) - before
+            st.now[...] = int(st.now) + max(
+                1, executed * cfg.us_per_instr // 1000
+            )
+    else:
+        for vm in nodes:
+            before = int(vm.state.steps)
+            vm._slice(steps)
+            executed = int(vm.state.steps) - before
+            vm.state.now[...] = int(vm.state.now) + max(
+                1, executed * cfg.us_per_instr // 1000
+            )
 
     progress = [False] * N
     # Phase 1: all sends, (node, task) order.

@@ -1137,6 +1137,83 @@ class Interpreter:
         # executors are built on.
         self.run_slice_fn = run_slice
 
+        # Executive scheduler ---------------------------------------------------
+        # Same runnability classes as `schedule` (Alg. 6), but ties break
+        # lexicographically on (class, prio, round-robin rotation from the
+        # last-run slot) instead of lowest-index-first.  `rot` is a
+        # permutation of 0..T-1 so the argmin among candidates is unique:
+        # equal-(class, prio) tasks share the CPU round-robin, which is the
+        # starvation-freedom guarantee the Executive tests rely on.
+
+        def schedule_prio(st: VMState):
+            idx = jnp.arange(T, dtype=I32)
+            ev_hit = (st.tstatus == ST_EVENT) & (
+                jnp.take(st.mem, jnp.clip(st.ev_addr - MEM_BASE, 0, MEM - 1))
+                == st.ev_val
+            ) & (st.ev_addr >= MEM_BASE)
+            ev_hit_cs = (st.tstatus == ST_EVENT) & (st.ev_addr < MEM_BASE) & (
+                jnp.take(st.cs, jnp.clip(st.ev_addr, 0, CS - 1)) == st.ev_val
+            )
+            ev_hit = ev_hit | ev_hit_cs
+            to_hit = ((st.tstatus == ST_SLEEP) | (st.tstatus == ST_EVENT)) & (
+                st.now >= st.timeout
+            )
+            ready = st.tstatus == ST_YIELD
+            klass = jnp.where(ev_hit, 3, jnp.where(to_hit, 2, jnp.where(ready, 1, 0)))
+            rot = jnp.mod(idx - st.cur - 1, T)
+            neg_inf = jnp.int32(-(2 ** 31))
+            kmax = jnp.max(klass)
+            cand = klass == kmax
+            pmax = jnp.max(jnp.where(cand, st.prio, neg_inf))
+            cand = cand & (st.prio == pmax)
+            best = jnp.argmin(jnp.where(cand, rot, T)).astype(I32)
+            found = kmax > 0
+
+            def wake(s):
+                k = klass[best]
+                was_event = s.tstatus[best] == ST_EVENT
+                s = s._replace(cur=best, tstatus=s.tstatus.at[best].set(ST_RUN))
+                def push_status(x, v):
+                    return x._replace(
+                        ds=x.ds.at[best, jnp.clip(x.dsp[best], 0, DS - 1)].set(v),
+                        dsp=x.dsp.at[best].add(1),
+                    )
+                s = lax.cond(
+                    was_event & (k == 3), lambda x: push_status(x, I32(0)), lambda x: x, s
+                )
+                s = lax.cond(
+                    was_event & (k == 2), lambda x: push_status(x, I32(-1)), lambda x: x, s
+                )
+                return s
+
+            st = lax.cond(found, wake, lambda s: s, st)
+            return st, found
+
+        self._schedule_prio = schedule_prio
+
+        def run_slice_exec(st: VMState, steps: int):
+            """One Executive micro-slice: schedule_prio -> vmloop -> preempt.
+
+            Returns ``(st, found, switched, preempted)`` so the fleet can
+            accumulate task-level counters without a second pass: ``switched``
+            is 1 when the dispatcher picked a different slot than last ran,
+            ``preempted`` is 1 when the task was still ST_RUN at quantum end.
+            """
+            prev = st.cur
+            st, found = schedule_prio(st)
+            switched = (found & (st.cur != prev)).astype(I32)
+            st = lax.cond(found, lambda s: vmloop(s, steps), lambda s: s, st)
+            preempted = st.tstatus[st.cur] == ST_RUN
+            st = lax.cond(
+                preempted,
+                lambda s: s._replace(tstatus=s.tstatus.at[s.cur].set(ST_YIELD)),
+                lambda s: s,
+                st,
+            )
+            return st, found, switched, preempted.astype(I32)
+
+        self.run_slice_exec_fn = run_slice_exec
+
 
 @functools.lru_cache(maxsize=8)
 def get_interpreter(cfg: VMConfig) -> Interpreter:

@@ -1,6 +1,9 @@
 """Input-Output System (paper §3.6, Def. 2): the VM's foreign interface.
 
-``FiosRegistry``  — host functions bridged into the word set (fiosAdd).
+``FiosRegistry``  — host functions bridged into the word set (fiosAdd);
+                    now a deprecation shim over the numbered SVC table in
+                    ``repro.exec.syscalls`` (stable syscall numbers with
+                    declared arities, vectorized batch handlers).
 ``DiosRegistry``  — host data arrays mapped into the VM address space
                     at ``MEM_BASE`` (diosAdd); e.g. the ADC sample buffer.
 ``HostLink``      — host-side message bus between REXAVM nodes: wires each
@@ -48,30 +51,51 @@ class FiosEntry:
 
 
 class FiosRegistry:
+    """Deprecated name-keyed facade over the numbered SVC table.
+
+    Host callbacks now live in :class:`repro.exec.syscalls.SyscallTable`
+    (stable syscall numbers, declared arities, vectorized handlers).  This
+    shim keeps the legacy surface byte-compatible: ``add`` forwards into
+    ``table.register`` with lowest-free-slot allocation, which reproduces
+    the old registration-order opcodes, and ``entries``/``by_name``/
+    ``opcode``/``entry_for_opcode`` read straight through — the compiler
+    and ``REXAVM._service_io`` never notice the swap.  New code should use
+    ``vm.fios.table.register(...)`` (or ``REXAVM.svc_add``) directly.
+    """
+
     def __init__(self):
-        self.entries: list[FiosEntry] = []
-        self.by_name: dict[str, int] = {}
+        from repro.exec.syscalls import SyscallTable
+
+        self.table = SyscallTable()
+
+    @property
+    def entries(self):
+        return self.table.entries
+
+    @property
+    def by_name(self):
+        return self.table.by_name
 
     def add(self, name: str, fn: Callable, args: int = 0, ret: int = 0) -> int:
-        """fiosAdd (paper Def. 2). Returns the assigned opcode."""
-        if len(self.entries) >= MAX_FIOS:
-            raise RuntimeError("FIOS table full")
-        if name in self.by_name:
-            # Re-registration replaces the callback (incremental updates).
-            idx = self.by_name[name]
-            self.entries[idx] = FiosEntry(name, fn, args, ret)
-            return FIOS_BASE + idx
-        idx = len(self.entries)
-        self.entries.append(FiosEntry(name, fn, args, ret))
-        self.by_name[name] = idx
-        return FIOS_BASE + idx
+        """fiosAdd (paper Def. 2). Returns the assigned opcode.
+
+        Deprecated: registrations land in the numbered syscall table.
+        """
+        import warnings
+
+        warnings.warn(
+            "FiosRegistry.add is deprecated; register numbered syscalls via "
+            "repro.exec.syscalls.SyscallTable (vm.fios.table.register)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return self.table.register(name, fn, args=args, ret=ret)
 
     def opcode(self, name: str) -> Optional[int]:
-        idx = self.by_name.get(name)
-        return None if idx is None else FIOS_BASE + idx
+        return self.table.opcode(name)
 
-    def entry_for_opcode(self, opcode: int) -> FiosEntry:
-        return self.entries[opcode - FIOS_BASE]
+    def entry_for_opcode(self, opcode: int):
+        return self.table.entry_for_opcode(opcode)
 
 
 @dataclass

@@ -804,3 +804,49 @@ class Oracle:
         if int(st.tstatus[int(st.cur)]) == ST_RUN:
             st.tstatus[int(st.cur)] = ST_YIELD
         return st, found
+
+    # -- Executive scheduler (mirror of interp.schedule_prio) --------------------
+
+    def schedule_prio(self, st: VMState):
+        """Lexicographic (class, prio, round-robin rotation) task pick."""
+        T = self.cfg.max_tasks
+        cur = int(st.cur)
+        best, best_key, best_klass = -1, None, 0
+        for i in range(T):
+            s = int(st.tstatus[i])
+            klass = 0
+            if s == ST_EVENT and self._mread(st, int(st.ev_addr[i])) == int(st.ev_val[i]):
+                klass = 3
+            elif s in (ST_SLEEP, ST_EVENT) and int(st.now) >= int(st.timeout[i]):
+                klass = 2
+            elif s == ST_YIELD:
+                klass = 1
+            if klass == 0:
+                continue
+            rot = (i - cur - 1) % T
+            key = (klass, int(st.prio[i]), -rot)
+            if best < 0 or key > best_key:
+                best, best_key, best_klass = i, key, klass
+        if best < 0:
+            return st, False
+        was_event = int(st.tstatus[best]) == ST_EVENT
+        st.cur[...] = best
+        st.tstatus[best] = ST_RUN
+        if was_event:
+            st.ds[best, min(int(st.dsp[best]), self.cfg.ds_size - 1)] = (
+                0 if best_klass == 3 else -1
+            )
+            st.dsp[best] += 1
+        return st, True
+
+    def run_slice_exec(self, st: VMState, steps: int):
+        """Executive micro-slice: returns (st, found, switched, preempted)."""
+        prev = int(st.cur)
+        st, found = self.schedule_prio(st)
+        switched = 1 if (found and int(st.cur) != prev) else 0
+        if found:
+            st = self.vmloop(st, steps)
+        preempted = 1 if int(st.tstatus[int(st.cur)]) == ST_RUN else 0
+        if preempted:
+            st.tstatus[int(st.cur)] = ST_YIELD
+        return st, found, switched, preempted

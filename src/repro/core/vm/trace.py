@@ -259,6 +259,10 @@ class _TraceEngine:
         # Counting twin of finish_b — (S, remaining) -> (S, hists) — built
         # on first obs use (see ensure_obs).
         self.finish_obs_b = None
+        # Executive twins — priority schedule + preempt-reporting tail —
+        # built on first exec use (see ensure_exec).
+        self.schedule_exec_b = None
+        self.finish_exec_b = None
 
         self.traces: dict = {}   # (prog_key, entry_pc, cap) -> _Trace
         self.fns: dict = {}      # shape tuple -> compiled trace fn
@@ -335,6 +339,48 @@ class _TraceEngine:
             self.finish_obs_b = jax.jit(
                 jax.vmap(make_counting_finish(self.interp))
             )
+
+    def ensure_exec(self) -> None:
+        """Attach the Executive twins: ``schedule_exec_b(S) -> (S, found,
+        switched)`` (priority/round-robin scheduler) and ``finish_exec_b(S,
+        remaining) -> (S, preempted)`` — byte-identical to finish_b with the
+        quantum-exhaustion flag returned for the fleet's counters."""
+        if self.finish_exec_b is not None:
+            return
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        schedule_prio = self.interp._schedule_prio
+        step_instr = self.interp._step_instr
+
+        def sched_exec(S: VMState):
+            prev = S.cur
+            S, found = jax.vmap(schedule_prio)(S)
+            switched = (found & (S.cur != prev)).astype(jnp.int32)
+            return S, found, switched
+
+        def finish_exec_one(st: VMState, remaining):
+            def cond(carry):
+                s, n = carry
+                return (n < remaining) & (s.tstatus[s.cur] == ST_RUN)
+
+            def body(carry):
+                s, n = carry
+                return step_instr(s), n + 1
+
+            st, _ = lax.while_loop(cond, body, (st, jnp.int32(0)))
+            still = st.tstatus[st.cur] == ST_RUN
+            st = lax.cond(
+                still,
+                lambda s: s._replace(tstatus=s.tstatus.at[s.cur].set(ST_YIELD)),
+                lambda s: s,
+                st,
+            )
+            return st, still.astype(jnp.int32)
+
+        self.schedule_exec_b = jax.jit(sched_exec)
+        self.finish_exec_b = jax.jit(jax.vmap(finish_exec_one))
 
     def note_group(self, prog_key, n_nodes: int) -> None:
         g = self.group_stats.setdefault(
@@ -417,15 +463,27 @@ class TraceJitExecutor:
             self.op_hist += np.asarray(aux.op_hist)
         return S, found
 
+    def run_slice_exec_batched(self, S: VMState, steps: int):
+        """Executive micro-slice: priority schedule, then the ordinary
+        trace machinery (probe/group/specialize/tail) with the preempt
+        flags returned.  ``(S, found, switched, preempted)``."""
+        eng = self.engine
+        eng.ensure_exec()
+        S, found, switched = eng.schedule_exec_b(S)
+        S, preempted = self._execute_after_schedule(S, steps, exec_mode=True)
+        return S, found, switched, preempted
+
     def _execute_after_schedule(
-        self, S: VMState, steps: int, obs: bool = False
+        self, S: VMState, steps: int, obs: bool = False, exec_mode: bool = False
     ):
         """Everything after the (not idempotent) schedule phase: probe,
         group, apply compiled traces, generic tail.  With ``obs`` the
         specialized steps are binned *without re-execution* — each group's
         per-node counts feed the closed form over the trace's
         ``hist_prefix`` — the counting tail covers the rest, and the
-        return is ``(S, ExecAux)`` instead of ``(S, None)``."""
+        return is ``(S, ExecAux)`` instead of ``(S, None)``.  With
+        ``exec_mode`` the tail reports per-node preemption flags and the
+        return is ``(S, preempted)``."""
         import jax
         import jax.numpy as jnp
 
@@ -499,6 +557,9 @@ class TraceJitExecutor:
                 deopts=deopts,
             )
             return S, aux
+        if exec_mode:
+            S, preempted = eng.finish_exec_b(S, steps - ns)
+            return S, preempted
         S = eng.finish_b(S, steps - ns)
         return S, None
 

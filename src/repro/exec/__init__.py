@@ -1,0 +1,43 @@
+"""repro.exec — the fleet Executive (paper Def. 1 / Alg. 6 multi-tasking).
+
+``executive.py`` — ``ExecutiveConfig`` (device-resident preemptive
+                   scheduling: priority + round-robin quanta inside the
+                   round loop) and ``Executive`` (host-side LSA-style
+                   energy/deadline admission at spawn).
+``syscalls.py``  — the numbered SVC table replacing string-keyed FIOS
+                   registration, and ``VectorSyscallService``: one batched
+                   handler call per syscall per round-chunk instead of
+                   O(nodes) Python callbacks.
+``services.py``  — the first three services: UART→serve stream sink,
+                   FS→checkpoint store, CAN→mailbox bridge.
+"""
+
+from repro.exec.executive import Admission, Executive, ExecutiveConfig
+from repro.exec.services import (
+    CANService,
+    FSService,
+    ServiceSet,
+    UARTService,
+    install_services,
+)
+from repro.exec.syscalls import (
+    Syscall,
+    SyscallRow,
+    SyscallTable,
+    VectorSyscallService,
+)
+
+__all__ = [
+    "Admission",
+    "Executive",
+    "ExecutiveConfig",
+    "Syscall",
+    "SyscallRow",
+    "SyscallTable",
+    "VectorSyscallService",
+    "UARTService",
+    "FSService",
+    "CANService",
+    "ServiceSet",
+    "install_services",
+]

@@ -1,0 +1,179 @@
+"""The Executive: multi-task nodes with admission-controlled spawning.
+
+The paper's VM (Def. 1, Alg. 6) is explicitly multi-tasking: every node
+already materializes a task table in ``VMState`` — per-slot ``pc``,
+``tstatus``, ``prio``, ``deadline``, and a private stack window in
+``ds``/``rs``/``fs``.  What was missing is an *executive* over that table:
+
+* **device side** — ``interp.schedule_prio`` (and its Oracle mirror), a
+  preemptive scheduler that picks the next runnable slot *inside* the round
+  loop: runnability classes exactly as Alg. 6 (IO events > timeouts >
+  ready), ties broken by ``prio`` and then round-robin rotation from the
+  last-run slot, with a ``quantum``-instruction preemption budget per
+  micro-slice.  ``ExecutiveConfig`` selects this scheduler fleet-wide via
+  ``FleetVM(executive=...)``.
+* **host side** — :class:`Executive`, LSA-style admission at ``spawn``
+  (``sched/lsa.py``): a task is admitted only if its declared energy cost
+  fits the node's :class:`EnergyModel` budget and its predicted duration
+  fits the deadline; rejected spawns are counted and logged, never
+  launched.
+
+Task-table layout (slot = task id, ``T = cfg.max_tasks``):
+
+====  =========================================================
+slot  use
+====  =========================================================
+0     boot task (``launch``/``run`` default; daemons live here)
+1+    spawned tasks — host ``Executive.spawn`` or the ``task`` word
+====  =========================================================
+
+A round under the Executive runs ``slices`` micro-slices of ``quantum``
+instructions each (``quantum * slices`` replaces ``steps_per_slice``), so a
+high-priority wakeup preempts a busy task within one quantum rather than
+one round.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.vm import vmstate as vms
+from repro.core.vm.spec import ST_FREE
+from repro.sched.lsa import EnergyModel
+
+
+@dataclass(frozen=True)
+class ExecutiveConfig:
+    """Fleet-wide Executive scheduling parameters.
+
+    Frozen/hashable: it is part of the compiled-kernel cache key, exactly
+    like ``VMConfig``.  ``quantum * slices`` instructions run per fleet
+    round (the defaults cover ``steps_per_slice=256``).
+    """
+
+    quantum: int = 32        # instructions per Executive micro-slice
+    slices: int = 8          # micro-slices per fleet round
+
+    def __post_init__(self):
+        if self.quantum < 1 or self.slices < 1:
+            raise ValueError("ExecutiveConfig.quantum/slices must be >= 1")
+
+    @property
+    def steps_per_round(self) -> int:
+        return self.quantum * self.slices
+
+
+@dataclass
+class Admission:
+    """One spawn decision (the Executive's audit log row)."""
+
+    node: int
+    task: int                # slot launched, -1 if rejected
+    prio: int
+    deadline: int
+    admitted: bool
+    reason: str              # "ok" | "no-slot" | "infeasible" | "no-energy"
+
+
+class Executive:
+    """Host-side executive over a fleet's task tables.
+
+    ``spawn`` mutates the *host* node states; call it before
+    ``FleetVM.run``/``start`` or between runs — when the fleet is live on
+    device the Executive pushes the refreshed states for you.
+    """
+
+    def __init__(self, fleet, energy: Optional[EnergyModel] = None):
+        self.fleet = fleet
+        self.nodes = fleet.nodes
+        # Per-node budget stores, copied from the template (infinite budget
+        # when admission is deadline-only).
+        tpl = energy or EnergyModel(capacity=float("inf"), level=float("inf"))
+        self.energy = [
+            EnergyModel(tpl.capacity, tpl.level, tpl.p_source) for _ in self.nodes
+        ]
+        self._last_now = [0] * len(self.nodes)
+        self.log: list[Admission] = []
+
+    # -- admission --------------------------------------------------------------
+
+    def _free_slot(self, st) -> int:
+        for t in range(1, len(st.tstatus)):  # slot 0 is the boot task
+            if int(st.tstatus[t]) == ST_FREE:
+                return t
+        return -1
+
+    def spawn(
+        self,
+        node: int,
+        prog,
+        prio: int = 0,
+        deadline: int = 0,
+        e_cost: float = 0.0,
+        duration_ms: int = 0,
+        task: int | None = None,
+    ) -> int:
+        """Admit-and-launch ``prog`` on ``node``; returns the slot or -1.
+
+        ``prog`` is program text (compiled via the node's frontend) or an
+        entry address.  ``deadline`` is an absolute virtual-clock ms bound
+        (0 = none); ``duration_ms`` the declared run-time estimate and
+        ``e_cost`` the declared energy draw (LSA Job fields).
+        """
+        vm = self.nodes[node]
+        live = getattr(self.fleet, "_S", None) is not None
+        if live:
+            self.fleet.sync()
+        st = vm.state
+        now = int(st.now)
+        energy = self.energy[node]
+        energy.advance(max(0, now - self._last_now[node]) / 1000.0)
+        self._last_now[node] = now
+
+        slot = task if task is not None else self._free_slot(st)
+        if slot < 0 or int(st.tstatus[slot]) != ST_FREE:
+            return self._reject(node, prio, deadline, "no-slot")
+        if deadline > 0 and now + duration_ms > deadline:
+            return self._reject(node, prio, deadline, "infeasible")
+        if not energy.drain(e_cost):
+            return self._reject(node, prio, deadline, "no-energy")
+
+        entry = prog if isinstance(prog, int) else vm.load(prog).entry
+        vm.state = vms.launch_task(vm.state, slot, entry, prio, deadline)
+        self.log.append(Admission(node, slot, prio, deadline, True, "ok"))
+        if hasattr(self.fleet, "_spawns_admitted"):
+            self.fleet._spawns_admitted += 1
+        if live:
+            self.fleet.push()
+        return slot
+
+    def _reject(self, node: int, prio: int, deadline: int, reason: str) -> int:
+        self.log.append(Admission(node, -1, prio, deadline, False, reason))
+        if hasattr(self.fleet, "_spawns_rejected"):
+            self.fleet._spawns_rejected += 1
+        return -1
+
+    # -- introspection ----------------------------------------------------------
+
+    @property
+    def spawns_admitted(self) -> int:
+        return sum(1 for a in self.log if a.admitted)
+
+    @property
+    def spawns_rejected(self) -> int:
+        return sum(1 for a in self.log if not a.admitted)
+
+    def task_table(self, node: int) -> list[dict]:
+        """Host view of one node's task table (debug/serve introspection)."""
+        st = self.nodes[node].state
+        return [
+            {
+                "task": t,
+                "status": int(st.tstatus[t]),
+                "pc": int(st.pc[t]),
+                "prio": int(st.prio[t]),
+                "deadline": int(st.deadline[t]),
+            }
+            for t in range(len(st.tstatus))
+        ]

@@ -1,0 +1,310 @@
+"""Numbered syscall plane: the SVC table and its vectorized host service.
+
+Two pieces replace the ad-hoc string-keyed FIOS surface:
+
+``SyscallTable``        — the SVC table (rBPF-style numbered host API):
+                          every host service gets a *stable* syscall number
+                          with declared arg/ret arity; the word opcode is
+                          ``FIOS_BASE + num`` so existing bytecode and the
+                          compiler's name resolution are unchanged.
+                          ``FiosRegistry`` (core/vm/ios.py) is now a
+                          deprecation shim over this table.
+``VectorSyscallService``— the host half of the plane: one gather of *all*
+                          SVC-suspended node slices, rows grouped by syscall
+                          number, **one handler invocation per distinct
+                          syscall** for vectorized services (instead of
+                          O(nodes) Python callbacks), then one scatter back.
+                          Byte-compatible with the per-node
+                          ``REXAVM._service_io`` pop/push/resume semantics.
+
+A *vectorized* handler has signature ``fn(rows, svc)`` where ``rows`` is a
+list of :class:`SyscallRow` and ``svc`` is the calling service (handlers use
+``svc.post`` to deliver mailbox messages — the CAN bridge).  It returns a
+list of return values (one per row) when the syscall declares ``ret``, else
+``None``.  Legacy scalar callbacks keep their ``fn(*args)`` signature and are
+invoked per row (counted in ``scalar_calls`` — the benchmark's baseline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.vm.ios import FleetIOService
+from repro.core.vm.spec import FIOS_BASE, MAX_FIOS, ST_IOWAIT, ST_YIELD
+
+
+@dataclass
+class Syscall:
+    """One SVC table row: a stable number with declared arg/ret arity."""
+
+    name: str
+    fn: Callable
+    args: int = 0           # cells popped from DS
+    ret: int = 0            # cells pushed (0 or 1)
+    num: int = 0            # stable syscall number; opcode = FIOS_BASE + num
+    vectorized: bool = False  # fn(rows, svc) serves a whole batch
+
+    @property
+    def opcode(self) -> int:
+        return FIOS_BASE + self.num
+
+
+class SyscallTable:
+    """The numbered SVC table.
+
+    ``register`` without an explicit ``num`` allocates the lowest free slot,
+    which reproduces the legacy registration-order numbering, so frames
+    compiled against a ``FiosRegistry`` keep decoding.  Services that must
+    share a number across every node in a fleet (the repro.exec.services
+    trio) pin ``num`` explicitly; pinning a slot that is already bound to a
+    *different* name is an error.
+    """
+
+    def __init__(self):
+        # Dense slot list indexed by syscall number; holes (None) appear
+        # only between auto-allocated entries and explicitly pinned ones.
+        self.entries: list[Optional[Syscall]] = []
+        self.by_name: dict[str, int] = {}
+
+    def register(
+        self,
+        name: str,
+        fn: Callable,
+        args: int = 0,
+        ret: int = 0,
+        num: int | None = None,
+        vectorized: bool = False,
+    ) -> int:
+        """svcAdd: bind ``name`` to syscall ``num``. Returns the opcode."""
+        if name in self.by_name:
+            cur = self.by_name[name]
+            if num is not None and num != cur:
+                raise ValueError(
+                    f"syscall {name!r} already bound to number {cur}, not {num}"
+                )
+            # Re-registration replaces the callback (incremental updates).
+            self.entries[cur] = Syscall(name, fn, args, ret, cur, vectorized)
+            return FIOS_BASE + cur
+        if num is None:
+            num = next(
+                (i for i, e in enumerate(self.entries) if e is None),
+                len(self.entries),
+            )
+            if num >= MAX_FIOS:
+                raise RuntimeError("FIOS table full")
+        if not 0 <= num < MAX_FIOS:
+            raise ValueError(f"syscall number {num} outside 0..{MAX_FIOS - 1}")
+        while len(self.entries) <= num:
+            self.entries.append(None)
+        if self.entries[num] is not None:
+            raise ValueError(
+                f"syscall number {num} already bound to {self.entries[num].name!r}"
+            )
+        self.entries[num] = Syscall(name, fn, args, ret, num, vectorized)
+        self.by_name[name] = num
+        return FIOS_BASE + num
+
+    def opcode(self, name: str) -> Optional[int]:
+        num = self.by_name.get(name)
+        return None if num is None else FIOS_BASE + num
+
+    def entry_for_opcode(self, opcode: int) -> Optional[Syscall]:
+        return self.entries[opcode - FIOS_BASE]
+
+    def numbers(self) -> dict[str, int]:
+        """Name -> stable syscall number (the published SVC ABI)."""
+        return dict(self.by_name)
+
+
+class SyscallRow(NamedTuple):
+    """One SVC-suspended (node, task) request, arguments already popped."""
+
+    node: int
+    task: int
+    num: int
+    args: tuple
+    vm: object  # the node's REXAVM frontend (handlers may read state/dios)
+
+
+class VectorSyscallService(FleetIOService):
+    """Batched SVC servicing over the fleet's node axis.
+
+    Same gather/scatter motion as :class:`FleetIOService` (one
+    ``take_nodes`` + one ``put_nodes`` per service), but the host half no
+    longer walks nodes one ``_service_io`` at a time: suspended rows are
+    grouped by syscall number and each *vectorized* service is invoked once
+    per group.  ``svc_batches`` vs ``scalar_calls`` is the benchmark's
+    batched-vs-per-node comparison.
+
+    Stack effects (pop arity, push, pc advance, ST_YIELD resume) replicate
+    ``REXAVM._service_io`` cell for cell, so a fleet serviced through this
+    plane stays byte-exact vs the per-node reference.  Rows are collected
+    and resumed in (node, task) order; handler *invocation* order is
+    first-seen syscall number, which only matters to handlers with
+    cross-node side effects (they see one deterministic batch either way).
+    """
+
+    def __init__(self, nodes):
+        super().__init__(nodes)
+        self.syscalls = 0        # SVC rows serviced
+        self.svc_batches = 0     # vectorized handler invocations
+        self.scalar_calls = 0    # legacy per-row callback invocations
+        self.posts = 0           # mailbox messages delivered (svc.post)
+        self.post_drops = 0      # posts dropped on a full ring
+        self._pending_posts: list[tuple[int, int, int]] = []  # (dst, src, v)
+
+    # -- handler-facing API ----------------------------------------------------
+
+    def post(self, dst: int, src: int, value: int) -> None:
+        """Queue a mailbox message for node ``dst`` (delivered after the
+        scatter, through the same ring-full drop rule as ``send``)."""
+        self._pending_posts.append((int(dst), int(src), int(value)))
+
+    # -- service ---------------------------------------------------------------
+
+    def _service(self, S, node_idx):
+        import jax
+
+        from repro.core.vm import vmstate as vms
+        from repro.core.vm.vmstate import VMState
+
+        node_idx = [int(i) for i in node_idx]
+        if not node_idx:
+            return S, False
+        sub = vms.take_nodes(S, np.asarray(node_idx, np.int32))
+        host = jax.device_get(sub)
+        self.d2h_bytes += vms.state_nbytes(host)
+        for j, i in enumerate(node_idx):
+            self.nodes[i].state = VMState(*[np.array(f[j]) for f in host])
+        progress = self._service_host(node_idx)
+        back = vms.stack_states([self.nodes[i].state for i in node_idx])
+        self.h2d_bytes += vms.state_nbytes(back)
+        S = vms.put_nodes(S, np.asarray(node_idx, np.int32), back)
+        self.services += 1
+        self.nodes_serviced += len(node_idx)
+        S = self._deliver_posts(S)
+        return S, progress
+
+    def _service_host(self, node_idx) -> bool:
+        groups: dict[int, list[SyscallRow]] = {}
+        order: list[int] = []
+        progress = False
+        for i in node_idx:
+            vm = self.nodes[i]
+            st = vm.state
+            for t in range(vm.cfg.max_tasks):
+                if int(st.tstatus[t]) != ST_IOWAIT or int(st.io_op[t]) == 0:
+                    continue
+                opcode = int(st.io_op[t])
+                if opcode in (vm._op_send, vm._op_receive):
+                    continue  # routed on device by the fleet
+                if opcode < FIOS_BASE:
+                    progress |= self._builtin(vm, t, opcode)
+                    continue
+                entry = vm.fios.entry_for_opcode(opcode)
+                args = self._pop(vm, t, entry.args) if entry.args else ()
+                num = opcode - FIOS_BASE
+                if num not in groups:
+                    groups[num] = []
+                    order.append(num)
+                groups[num].append(SyscallRow(i, t, num, args, vm))
+        for num in order:
+            rows = groups[num]
+            entries = [r.vm.fios.entry_for_opcode(FIOS_BASE + num) for r in rows]
+            fns = {id(e.fn) for e in entries}
+            if len(fns) == 1 and all(
+                getattr(e, "vectorized", False) for e in entries
+            ):
+                rets = entries[0].fn(rows, self)
+                self.svc_batches += 1
+            else:
+                rets = [e.fn(*r.args) for e, r in zip(entries, rows)]
+                self.scalar_calls += len(rows)
+            self.syscalls += len(rows)
+            for k, (row, entry) in enumerate(zip(rows, entries)):
+                if entry.ret:
+                    rv = None if rets is None else rets[k]
+                    self._push(row.vm, row.task, int(rv) if rv is not None else 0)
+                self._resume(row.vm, row.task)
+            progress = True
+        return progress
+
+    # -- per-row primitives (byte mirrors of REXAVM._service_io) ----------------
+
+    @staticmethod
+    def _pop(vm, t: int, n: int) -> tuple:
+        st = vm.state
+        vals = tuple(
+            int(st.ds[t, max(int(st.dsp[t]) - n + k, 0)]) for k in range(n)
+        )
+        st.dsp[t] -= n
+        return vals
+
+    @staticmethod
+    def _push(vm, t: int, v: int) -> None:
+        st = vm.state
+        st.ds[t, min(int(st.dsp[t]), vm.cfg.ds_size - 1)] = np.int32(v)
+        st.dsp[t] += 1
+
+    @staticmethod
+    def _resume(vm, t: int, advance: bool = True) -> None:
+        st = vm.state
+        st.io_op[t] = 0
+        if advance:
+            st.pc[t] = int(st.pc[t]) + 1
+        st.tstatus[t] = ST_YIELD
+
+    def _builtin(self, vm, t: int, opcode: int) -> bool:
+        if opcode == vm._op_out:
+            (v,) = self._pop(vm, t, 1)
+            vm.out_stream.append(v)
+            self._resume(vm, t)
+            return True
+        if opcode == vm._op_in:
+            if vm.in_queue:
+                self._push(vm, t, vm.in_queue.pop(0))
+                self._resume(vm, t)
+                return True
+            return False
+        # Unknown builtin: leave the task suspended (matches per-node path).
+        return False
+
+    # -- CAN-style mailbox delivery ---------------------------------------------
+
+    def _deliver_posts(self, S):
+        if not self._pending_posts:
+            return S
+        import jax
+
+        from repro.core.vm import vmstate as vms
+        from repro.core.vm.vmstate import VMState
+
+        posts, self._pending_posts = self._pending_posts, []
+        in_range = [p for p in posts if 0 <= p[0] < len(self.nodes)]
+        self.post_drops += len(posts) - len(in_range)
+        if not in_range:
+            return S
+        dsts = sorted({p[0] for p in in_range})
+        sub = vms.take_nodes(S, np.asarray(dsts, np.int32))
+        host = jax.device_get(sub)
+        self.d2h_bytes += vms.state_nbytes(host)
+        for j, i in enumerate(dsts):
+            self.nodes[i].state = VMState(*[np.array(f[j]) for f in host])
+        for dst, src, v in in_range:
+            vm = self.nodes[dst]
+            st = vm.state
+            MB = vm.cfg.mbox_size
+            if int(st.mbox_wr) - int(st.mbox_rd) >= MB:
+                self.post_drops += 1   # lossy bus: no backpressure on CAN
+                continue
+            slot = int(st.mbox_wr) % MB
+            st.mbox[2 * slot] = np.int32(src)
+            st.mbox[2 * slot + 1] = np.int32(v)
+            st.mbox_wr[...] = int(st.mbox_wr) + 1
+            self.posts += 1
+        back = vms.stack_states([self.nodes[i].state for i in dsts])
+        self.h2d_bytes += vms.state_nbytes(back)
+        return vms.put_nodes(S, np.asarray(dsts, np.int32), back)

@@ -318,7 +318,10 @@ class FleetMetrics:
                     misses (``DeadlineMonitor.snapshot()``);
     ``pallas``    — ``pallas_stats()`` minus the duplicate executor key;
     ``trace``     — ``trace_stats()`` minus the duplicate executor key;
-    ``transfers`` — ``transfer_stats()`` minus executor/rounds.
+    ``transfers`` — ``transfer_stats()`` minus executor/rounds;
+    ``executive`` — ``executive_stats()`` minus the duplicate executor key
+                    (task switches, preemptions, per-task deadline misses,
+                    syscall-plane counters; zeroed without an Executive).
     """
 
     executor: str
@@ -328,6 +331,7 @@ class FleetMetrics:
     pallas: dict = field(default_factory=dict)
     trace: dict = field(default_factory=dict)
     transfers: dict = field(default_factory=dict)
+    executive: dict = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -338,6 +342,7 @@ class FleetMetrics:
             "pallas": self.pallas,
             "trace": self.trace,
             "transfers": self.transfers,
+            "executive": self.executive,
         }
 
     def __getitem__(self, key):

@@ -1,0 +1,524 @@
+"""Executive + syscall-plane suite (device multi-tasking, vectorized SVC).
+
+The Executive (``repro.exec``) must be *semantics*, not behaviour drift:
+the preemptive priority scheduler, quantum preemption points and the
+batched syscall service are all specified by the plain-Python Oracle and
+``reference_round(executive=...)``, and every engine must reproduce them
+byte-exactly.  This suite pins:
+
+  * the multi-engine sweep — task-word programs (``task``/``yield``/
+    ``sleep``/``await``/``taskid``) through all four fleet executors
+    (batched / pallas / trace / oracle) under an ``ExecutiveConfig``,
+    asserting byte-exact states and identical task-switch/preemption
+    counters vs the host-routed reference;
+  * deterministic scheduling — a higher-priority task monopolizes the
+    round while a lower-priority one starves; equal priorities round-robin
+    (both make progress within one round); quantum exhaustion is counted
+    as a preemption exactly as the reference counts it;
+  * a hypothesis property test — random spawn/sleep/yield/priority
+    interleavings on the batched engine vs the Oracle-backed reference;
+  * the vectorized syscall plane — ``io_mode="vector"`` is byte-exact vs
+    ``io_mode="partial"`` on legacy scalar callbacks, and a shared
+    vectorized handler services a whole fleet in ONE batch per service
+    (``svc_batches``, not O(nodes) ``scalar_calls``);
+  * the UART/FS/CAN host services and their pinned SVC numbers;
+  * the ``FiosRegistry`` deprecation shim (name-keyed registrations land
+    in the numbered table, same opcodes, with a ``DeprecationWarning``);
+  * LSA-style admission at ``Executive.spawn`` (no-slot / infeasible /
+    no-energy) and the task-level deadline-miss counters.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import VMConfig
+from repro.core.vm import FleetVM, REXAVM, reference_round
+from repro.core.vm.spec import FIOS_BASE, MAX_FIOS, MEM_BASE, ST_FREE
+from repro.exec import (
+    Executive,
+    ExecutiveConfig,
+    SyscallTable,
+    VectorSyscallService,
+    install_services,
+)
+from repro.sched.lsa import EnergyModel
+
+CFG = VMConfig(cs_size=2048, steps_per_slice=64, mbox_size=4)
+ECFG = ExecutiveConfig(quantum=16, slices=4)
+
+FLEET_EXECUTORS = ("batched", "oracle", "pallas", "trace")
+
+
+# ---------------------------------------------------------------------------
+# Helpers: build an Executive fleet and its host-routed reference
+# ---------------------------------------------------------------------------
+
+def _build(executor, mains, spawns=(), ecfg=ECFG, io_mode=None):
+    """Fleet with per-node main programs + Executive-spawned tasks.
+
+    ``spawns`` is a list of (node, prog, prio, deadline) tuples applied in
+    order — the same calls against the live fleet and the reference copy.
+    """
+    fleet = FleetVM(
+        CFG, n=len(mains), executor=executor, executive=ecfg, io_mode=io_mode
+    )
+    ex = Executive(fleet)
+    for node, prog in zip(fleet.nodes, mains):
+        if prog:
+            node.launch(node.load(prog))
+    for node_i, prog, prio, deadline in spawns:
+        ex.spawn(node_i, prog, prio=prio, deadline=deadline)
+    return fleet, ex
+
+
+def _reference(mains, rounds, spawns=(), ecfg=ECFG):
+    """Replay ``rounds`` host-routed Executive rounds on fresh nodes."""
+    fleet, _ = _build("batched", mains, spawns, ecfg)
+    nodes = fleet.nodes
+    obs: dict = {}
+    for _ in range(rounds):
+        reference_round(nodes, obs=obs, executive=ecfg)
+        for vm in nodes:
+            vm._service_io(route_net=False)
+    return nodes, obs
+
+
+def _assert_states_equal(nodes_a, nodes_b, ctx=""):
+    for i, (a, b) in enumerate(zip(nodes_a, nodes_b)):
+        for f, x, y in zip(a.state._fields, a.state, b.state):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (ctx, i, f)
+        assert a.out_stream == b.out_stream, (ctx, i)
+
+
+# ---------------------------------------------------------------------------
+# Multi-engine sweep of the task words under the Executive round
+# ---------------------------------------------------------------------------
+
+TASK_SWEEP = [
+    # (id, mains, spawns)
+    ("spawn-word", [": w 3 0 do 7 out loop ;\n1 0 $ w task out 5 out",
+                    "2 out"], ()),
+    ("host-spawn", ["5 0 do i out loop", "1 2 + out"],
+     ((0, ": bg 2 0 do 100 out loop ;\nbg", 1, 0),
+      (1, "200 out", 3, 0))),
+    ("sleep-mix", [": w 2 sleep 9 out ;\n0 0 $ w task drop yield 4 out",
+                   "1 sleep taskid out ms out"], ()),
+    ("await-timeout", [f"2 1 {MEM_BASE + 40} await out", "yield 8 out"],
+     ((0, "3 sleep 77 out", 2, 0),)),
+    ("preempt-heavy", ["0 begin 1+ dup 200 >= until out"],
+     ((0, "0 begin 1+ dup 150 >= until out", 1, 0),)),
+]
+
+
+@pytest.fixture(scope="module")
+def task_sweep_runs():
+    """Every sweep scenario under every executor, plus its reference —
+    shared by the byte-exactness and counter-parity tests."""
+    out = {}
+    for name, mains, spawns in TASK_SWEEP:
+        runs = {}
+        for executor in FLEET_EXECUTORS:
+            fleet, _ = _build(executor, mains, spawns)
+            res = fleet.run(max_rounds=60)
+            runs[executor] = (fleet, res)
+        rounds = runs["batched"][1].rounds
+        runs["reference"] = _reference(mains, rounds, spawns)
+        out[name] = runs
+    return out
+
+
+@pytest.mark.parametrize("name", [n for n, _, _ in TASK_SWEEP])
+def test_task_words_byte_exact_across_engines(name, task_sweep_runs):
+    """Acceptance: the Executive round lands every engine on the same
+    bytes as the reference, including preemption points and syscall
+    suspensions (the vmloop may bail on task-class words, but the final
+    state must agree)."""
+    runs = task_sweep_runs[name]
+    ref_nodes, _ = runs["reference"]
+    rounds = runs["batched"][1].rounds
+    for executor in FLEET_EXECUTORS:
+        fleet, res = runs[executor]
+        assert res.rounds == rounds, (name, executor)
+        _assert_states_equal(fleet.nodes, ref_nodes, (name, executor))
+
+
+@pytest.mark.parametrize("name", [n for n, _, _ in TASK_SWEEP])
+def test_task_counters_match_reference(name, task_sweep_runs):
+    """task_switches/preemptions are semantic (the scheduler's dispatch
+    decisions), so all four engines must report exactly the reference's
+    counts."""
+    runs = task_sweep_runs[name]
+    _, obs = runs["reference"]
+    for executor in FLEET_EXECUTORS:
+        fleet, _ = runs[executor]
+        e = fleet.executive_stats()
+        assert e["enabled"] and e["quantum"] == ECFG.quantum
+        assert e["task_switches"] == obs.get("task_switches", 0), (
+            name, executor, e["task_switches"], obs,
+        )
+        assert e["preemptions"] == obs.get("preemptions", 0), (
+            name, executor, e["preemptions"], obs,
+        )
+        assert e["exec_slices"] > 0
+
+
+def test_preemptions_counted(task_sweep_runs):
+    """The heavy scenario's busy loops outlive the 16-instruction quantum,
+    so quantum exhaustion must be observed (and agreed on)."""
+    _, obs = task_sweep_runs["preempt-heavy"]["reference"]
+    assert obs.get("preemptions", 0) > 0
+    assert obs.get("task_switches", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# Deterministic priority / starvation / round-robin behaviour
+# ---------------------------------------------------------------------------
+
+_BUMP = ": bump begin {addr} @ 1+ {addr} ! again ;\nbump"
+
+
+def _progress_cells(prio_a, prio_b):
+    """Two infinite increment loops in slots 1/2; returns their counters
+    after ONE Executive round."""
+    addr_a, addr_b = MEM_BASE + 8, MEM_BASE + 9
+    fleet, ex = _build("batched", [""],
+                       ((0, _BUMP.format(addr=addr_a), prio_a, 0),
+                        (0, _BUMP.format(addr=addr_b), prio_b, 0)))
+    fleet.run(max_rounds=1)
+    mem = np.asarray(fleet.nodes[0].state.mem)
+    return int(mem[addr_a - MEM_BASE]), int(mem[addr_b - MEM_BASE])
+
+
+def test_priority_starves_lower():
+    """Strict priority: the prio-5 task takes every quantum of the round;
+    the prio-0 task makes zero progress."""
+    a, b = _progress_cells(0, 5)
+    assert b > 0
+    assert a == 0
+
+
+def test_equal_priority_round_robins():
+    """Equal priorities tie-break by round-robin rotation from the last
+    dispatched slot — both tasks progress within one round, neither
+    starves."""
+    a, b = _progress_cells(2, 2)
+    assert a > 0
+    assert b > 0
+
+
+# ---------------------------------------------------------------------------
+# Property test: random interleavings vs the Oracle-backed reference
+# ---------------------------------------------------------------------------
+
+_MAIN_TOKENS = ("1 out", "2 sleep", "yield", "3 0 do i drop loop", "9 out")
+_BG_TOKENS = ("100 out", "1 sleep", "yield", "0 begin 1+ dup 40 >= until drop")
+
+
+def _check_interleaving(mains, spawns):
+    """One drawn scenario: batched engine vs the Oracle-backed reference."""
+    spawn_rows = tuple((n, prog, prio, 0) for n, prog, prio in spawns)
+    fleet, _ = _build("batched", mains, spawn_rows)
+    res = fleet.run(max_rounds=24)
+    ref_nodes, _ = _reference(mains, res.rounds, spawn_rows)
+    _assert_states_equal(fleet.nodes, ref_nodes, "hypothesis")
+
+
+def test_random_interleavings_match_oracle():
+    """Any spawn/sleep/yield/priority interleaving the strategy can draw
+    must run byte-exactly on the batched engine vs the plain-Python
+    Oracle's Executive round."""
+    pytest.importorskip("hypothesis")  # dev-only dependency (see pyproject.toml)
+    from hypothesis import given, settings, strategies as st_h
+
+    mains_st = st_h.lists(
+        st_h.lists(st_h.sampled_from(_MAIN_TOKENS), min_size=1, max_size=4)
+        .map(" ".join),
+        min_size=2, max_size=2,
+    )
+    spawns_st = st_h.lists(
+        st_h.tuples(
+            st_h.integers(0, 1),                   # node
+            st_h.lists(st_h.sampled_from(_BG_TOKENS), min_size=1, max_size=3)
+            .map(" ".join),
+            st_h.integers(0, 3),                   # prio
+        ),
+        min_size=0, max_size=3,
+    )
+
+    @settings(max_examples=12, deadline=None)
+    @given(mains=mains_st, spawns=spawns_st)
+    def prop(mains, spawns):
+        _check_interleaving(mains, spawns)
+
+    prop()
+
+
+def test_fixed_interleavings_match_oracle():
+    """Deterministic fallback for the property test (runs even without
+    hypothesis): a handful of adversarial interleavings drawn from the
+    same grammar."""
+    cases = [
+        (["2 sleep 1 out", "yield 9 out"], []),
+        (["1 out yield 9 out", "3 0 do i drop loop 1 out"],
+         [(0, "100 out 1 sleep 100 out", 3), (1, "yield 100 out", 0)]),
+        (["9 out 2 sleep 9 out", "1 out"],
+         [(1, "0 begin 1+ dup 40 >= until drop", 2),
+          (1, "1 sleep 100 out", 2), (0, "yield", 1)]),
+    ]
+    for mains, spawns in cases:
+        _check_interleaving(mains, spawns)
+
+
+# ---------------------------------------------------------------------------
+# The vectorized syscall plane
+# ---------------------------------------------------------------------------
+
+def _svc_fleet(io_mode, vectorized, n=6):
+    """Fleet whose nodes call one shared 'double' syscall; scalar or
+    vectorized handler, same semantics."""
+    fleet = FleetVM(CFG, n=n, executor="batched", io_mode=io_mode)
+    if vectorized:
+        def double(rows, svc):
+            return [2 * r.args[0] for r in rows]
+    else:
+        def double(v):
+            return 2 * v
+    for i, node in enumerate(fleet.nodes):
+        node.svc_add("double", double, args=1, ret=1, vectorized=vectorized)
+        node.launch(node.load(f"{i + 1} double out  {10 * (i + 1)} double out"))
+    return fleet
+
+
+def test_vector_mode_byte_exact_vs_partial():
+    """io_mode='vector' with legacy scalar callbacks must reproduce the
+    per-node FleetIOService service byte for byte (same pops, pushes,
+    resume order) — only the counters differ."""
+    a = _svc_fleet("partial", vectorized=False)
+    b = _svc_fleet("vector", vectorized=False)
+    ra = a.run(max_rounds=30)
+    rb = b.run(max_rounds=30)
+    assert ra.rounds == rb.rounds
+    _assert_states_equal(a.nodes, b.nodes, "partial-vs-vector")
+    assert not hasattr(a.io_service, "svc_batches")
+    assert b.io_service.svc_batches == 0          # scalar fns never batch
+    assert b.io_service.scalar_calls > 0
+    assert b.executive_stats()["svc_scalar_calls"] > 0
+
+
+def test_vectorized_handler_one_batch_per_service():
+    """The acceptance proof: a shared vectorized handler services ALL
+    suspended nodes with one invocation per service call — svc_batches
+    stays at the number of service rounds while the scalar baseline pays
+    one Python call per row."""
+    vec = _svc_fleet("vector", vectorized=True)
+    scal = _svc_fleet("vector", vectorized=False)
+    rv = vec.run(max_rounds=30)
+    rs = scal.run(max_rounds=30)
+    assert rv.rounds == rs.rounds
+    _assert_states_equal(vec.nodes, scal.nodes, "vec-vs-scalar")
+    svc = vec.io_service
+    assert svc.syscalls == 2 * vec.n
+    assert svc.scalar_calls == 0
+    # ONE batch per syscall wave (each program makes two sequential calls),
+    # regardless of fleet size — not O(rows) Python callbacks.
+    assert svc.svc_batches == 2
+    assert svc.svc_batches < svc.syscalls
+    assert scal.io_service.scalar_calls == 2 * scal.n
+    t = vec.transfer_stats()
+    assert t["io_syscalls"] == 2 * vec.n
+    assert t["io_svc_batches"] == svc.svc_batches
+
+
+def test_vector_service_posts_ring_rules():
+    """svc.post delivers through the mailbox rings with the CAN rule:
+    lossy drop on a full ring (unlike send's backpressure)."""
+    fleet = FleetVM(CFG, n=2, executor="batched", io_mode="vector")
+
+    def flood(rows, svc):
+        for r in rows:
+            for k in range(CFG.mbox_size + 2):
+                svc.post(1, r.node, 100 + k)
+            svc.post(99, r.node, 7)              # out-of-range -> drop
+        return None
+
+    for node in fleet.nodes:
+        node.svc_add("flood", flood, args=0, ret=0, vectorized=True)
+    fleet.nodes[0].launch(fleet.nodes[0].load("flood 1 out"))
+    fleet.nodes[1].launch(fleet.nodes[1].load("1 2 + out"))
+    fleet.run(max_rounds=20)
+    svc = fleet.io_service
+    assert svc.posts == CFG.mbox_size             # ring capacity delivered
+    assert svc.post_drops == 3                    # 2 overflow + 1 bad dst
+    mbox = np.asarray(fleet.nodes[1].state.mbox)
+    assert list(mbox[1::2][: CFG.mbox_size]) == [
+        100 + k for k in range(CFG.mbox_size)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# UART / FS / CAN host services
+# ---------------------------------------------------------------------------
+
+def test_services_trio(tmp_path):
+    from repro.resilience.checkpoint import CheckpointManager
+
+    fleet = FleetVM(CFG, n=4, executor="batched", executive=ECFG)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    svcs = install_services(fleet.nodes, checkpoint_manager=mgr)
+    svcs.can.subscribe(7, 3)
+    for i, node in enumerate(fleet.nodes):
+        node.launch(node.load(f"{10 + i} uart.write  {i} 7 can.send  "
+                              f"{i} fs.save out"))
+    res = fleet.run(max_rounds=40)
+    assert all(s == "done" for s in res.statuses)
+    # UART: every write captured, in (node, task) order, batched.
+    assert svcs.uart.stream == [(i, 10 + i) for i in range(4)]
+    assert svcs.uart.batches == 1 and svcs.uart.writes == 4
+    # FS: one checkpoint per batch, restorable, id pushed back to the VM.
+    assert svcs.fs.saves == 1 and svcs.fs.requests == 4
+    assert mgr.latest_step() == 1
+    for i, vm in enumerate(fleet.nodes):
+        assert vm.out_stream == [10 + i, 1]       # uart echo + ckpt id
+    # CAN: all four frames fanned out to the node-3 subscriber's mailbox.
+    assert svcs.can.frames == 4 and svcs.can.deliveries == 4
+    mbox = np.asarray(fleet.nodes[3].state.mbox)
+    assert sorted(mbox[1::2][:4]) == [0, 1, 2, 3]
+    # The whole trio ran vectorized: one batch per service, zero scalar.
+    e = fleet.executive_stats()
+    assert e["syscalls"] == 12
+    assert e["svc_batches"] == 3
+    assert e["svc_scalar_calls"] == 0
+    assert e["svc_posts"] == 4 and e["svc_post_drops"] == 0
+
+
+def test_services_pin_stable_numbers():
+    """The service ABI: uart.write/fs.save/can.send hold fleet-wide pinned
+    SVC numbers (56/57/58) on every node."""
+    nodes = [REXAVM(CFG) for _ in range(2)]
+    svcs = install_services(nodes)               # no manager -> no fs.save
+    for vm in nodes:
+        nums = vm.fios.table.numbers()
+        assert nums["uart.write"] == 56
+        assert nums["can.send"] == 58
+        assert "fs.save" not in nums
+        assert vm.fios.opcode("uart.write") == FIOS_BASE + 56
+    assert svcs.fs is None
+
+
+# ---------------------------------------------------------------------------
+# The SVC table + FiosRegistry deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_syscall_table_numbering():
+    t = SyscallTable()
+    assert t.register("a", lambda: 0) == FIOS_BASE + 0
+    assert t.register("b", lambda: 0, args=1, ret=1) == FIOS_BASE + 1
+    assert t.register("pin", lambda: 0, num=9) == FIOS_BASE + 9
+    assert t.register("c", lambda: 0) == FIOS_BASE + 2   # lowest free slot
+    assert t.numbers() == {"a": 0, "b": 1, "pin": 9, "c": 2}
+    assert t.entry_for_opcode(FIOS_BASE + 1).name == "b"
+    # Re-registration replaces the callback, keeps the number.
+    fn = lambda: 42  # noqa: E731
+    assert t.register("a", fn) == FIOS_BASE + 0
+    assert t.entry_for_opcode(FIOS_BASE).fn is fn
+    with pytest.raises(ValueError):
+        t.register("clash", lambda: 0, num=9)    # slot already bound
+    with pytest.raises(ValueError):
+        t.register("a", lambda: 0, num=5)        # name bound elsewhere
+    with pytest.raises(ValueError):
+        t.register("oob", lambda: 0, num=MAX_FIOS)
+    t2 = SyscallTable()
+    for k in range(MAX_FIOS):
+        t2.register(f"s{k}", lambda: 0)
+    with pytest.raises(RuntimeError):
+        t2.register("overflow", lambda: 0)
+
+
+def test_fios_shim_forwards_to_svc_table():
+    """Satellite contract: name-keyed fios_add registrations land in the
+    numbered table with the legacy registration-order opcodes, under a
+    DeprecationWarning — existing examples and tests keep working."""
+    vm = REXAVM(CFG)
+    calls = []
+    with pytest.warns(DeprecationWarning):
+        op0 = vm.fios_add("first", lambda v: calls.append(v), args=1)
+    with pytest.warns(DeprecationWarning):
+        op1 = vm.fios_add("second", lambda: 7, ret=1)
+    assert (op0, op1) == (FIOS_BASE, FIOS_BASE + 1)      # legacy numbering
+    assert vm.fios.by_name == {"first": 0, "second": 1}
+    assert vm.fios.opcode("second") == op1
+    assert vm.fios.entry_for_opcode(op0).name == "first"
+    assert vm.fios.table.numbers() == {"first": 0, "second": 1}
+    res = vm.eval("41 first second out")
+    assert res.status == "done"
+    assert calls == [41] and vm.out_stream == [7]
+
+
+# ---------------------------------------------------------------------------
+# Admission control + deadline misses
+# ---------------------------------------------------------------------------
+
+def test_admission_no_energy_and_infeasible():
+    fleet = FleetVM(CFG, n=1, executor="batched", executive=ECFG)
+    ex = Executive(fleet, energy=EnergyModel(capacity=1.0, level=1.0))
+    assert ex.spawn(0, "1 out", e_cost=0.6) == 1
+    assert ex.spawn(0, "2 out", e_cost=0.6) == -1        # budget exhausted
+    assert ex.spawn(0, "3 out", deadline=5, duration_ms=10) == -1
+    assert ex.spawn(0, "4 out", deadline=50, duration_ms=10) == 2
+    reasons = [a.reason for a in ex.log]
+    assert reasons == ["ok", "no-energy", "infeasible", "ok"]
+    assert ex.spawns_admitted == 2 and ex.spawns_rejected == 2
+    e = fleet.executive_stats()
+    assert e["spawns_admitted"] == 2 and e["spawns_rejected"] == 2
+
+
+def test_admission_no_slot():
+    fleet = FleetVM(CFG, n=1, executor="batched", executive=ECFG)
+    ex = Executive(fleet)
+    slots = [ex.spawn(0, "yield 1 out") for _ in range(CFG.max_tasks)]
+    assert slots[: CFG.max_tasks - 1] == list(range(1, CFG.max_tasks))
+    assert slots[-1] == -1                       # slot 0 is the boot task
+    assert ex.log[-1].reason == "no-slot"
+
+
+def test_task_deadline_misses_counted():
+    """A spawned task whose absolute virtual-clock deadline passes is
+    counted once per occupancy, under every engine identically."""
+    mains = ["0 begin 1+ dup 3000 >= until out"]
+    spawns = ((0, "0 begin 1+ dup 2000 >= until out", 1, 2),)  # 2 ms bound
+    totals = {}
+    for executor in ("batched", "oracle"):
+        fleet, _ = _build(executor, mains, spawns)
+        fleet.run(max_rounds=60)
+        e = fleet.executive_stats()
+        totals[executor] = e["task_deadline_misses"]
+        assert e["task_deadline_misses"] >= 1
+        assert e["tasks_missed"] <= e["task_deadline_misses"]
+    assert totals["batched"] == totals["oracle"]
+
+
+def test_executive_and_obs_are_exclusive():
+    from repro.obs import ObsConfig
+
+    with pytest.raises(ValueError):
+        FleetVM(CFG, n=1, executive=ECFG, obs=ObsConfig())
+
+
+def test_executive_config_validation():
+    with pytest.raises(ValueError):
+        ExecutiveConfig(quantum=0)
+    with pytest.raises(ValueError):
+        ExecutiveConfig(slices=0)
+    assert ECFG.steps_per_round == 64
+    assert isinstance(hash(ECFG), int)           # kernel-cache key
+
+
+def test_metrics_executive_section():
+    fleet, ex = _build("batched", ["1 out", "2 out"],
+                       ((0, "3 out", 1, 0),))
+    fleet.run(max_rounds=20)
+    m = fleet.metrics().as_dict()
+    assert m["executive"]["enabled"] is True
+    assert m["executive"]["task_switches"] > 0
+    assert m["executive"]["spawns_admitted"] == 1
+    assert set(m["executive"]) == set(fleet.executive_stats()) - {"executor"}

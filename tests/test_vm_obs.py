@@ -149,7 +149,7 @@ def test_fleet_metrics_schema_stable(ring_metrics):
     for ex, d in dicts.items():
         assert set(d) == set(base), ex
         for section in ("counters", "latency", "pallas", "trace",
-                        "transfers"):
+                        "transfers", "executive"):
             assert set(d[section]) == set(base[section]), (ex, section)
         assert set(d["counters"]["op_retired"]) == set(
             base["counters"]["op_retired"]
@@ -165,16 +165,39 @@ def test_stats_schema_parity_across_executors(ring_metrics):
     p_keys = set(fleets["pallas"].pallas_stats())
     t_keys = set(fleets["trace"].trace_stats())
     x_keys = set(fleets["batched"].transfer_stats())
+    e_keys = set(fleets["batched"].executive_stats())
     for ex, fleet in fleets.items():
         assert set(fleet.pallas_stats()) == p_keys, ex
         assert set(fleet.trace_stats()) == t_keys, ex
         assert set(fleet.transfer_stats()) == x_keys, ex
+        assert set(fleet.executive_stats()) == e_keys, ex
         assert fleet.transfer_stats()["executor"] == ex
         assert fleet.transfer_stats()["rounds"] > 0
         if ex != "pallas":
             assert fleet.pallas_stats()["kernel_steps"] == 0
         if ex != "trace":
             assert fleet.trace_stats()["traces_compiled"] == 0
+
+
+def test_executive_counters_zeroed_without_executive(ring_metrics):
+    """Satellite contract: the task/syscall counter keys exist and are
+    zeroed under every backend when no Executive is configured — a
+    schema-stable namespace, not a conditional one."""
+    for ex, (fleet, _, m) in ring_metrics.items():
+        e = fleet.executive_stats()
+        assert e["enabled"] is False, ex
+        for key in ("exec_slices", "task_switches", "preemptions",
+                    "spawns_admitted", "spawns_rejected",
+                    "task_deadline_misses", "tasks_missed", "syscalls",
+                    "svc_batches", "svc_scalar_calls", "svc_posts",
+                    "svc_post_drops"):
+            assert e[key] == 0, (ex, key, e[key])
+        d = m.as_dict()
+        assert d["executive"]["enabled"] is False
+        assert d["pallas"]["exec_slices"] == 0, ex
+        assert d["trace"]["exec_slices"] == 0, ex
+        assert d["transfers"]["io_syscalls"] == 0, ex
+        assert d["transfers"]["io_svc_batches"] == 0, ex
 
 
 # ---------------------------------------------------------------------------
