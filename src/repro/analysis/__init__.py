@@ -1,0 +1,49 @@
+"""Static analysis over compiled REXAVM bytecode (the Auditor).
+
+Three passes, all host-side and run before a program executes:
+
+* ``verifier``    — CFG + abstract interpretation: prove ``EXC_STACK``
+                    unreachable, calls/jumps in bounds; verdicts feed the
+                    checks-elided kernel fast path;
+* ``feasibility`` — static opcode footprint vs. the Pallas kernel's
+                    claimed set and the trace-JIT's branch sets: resolves
+                    ``FleetVM(executor="auto")`` and AOT trace compiles;
+* ``cli``         — ``python -m repro.analysis.cli`` verify/lint over
+                    source files or fleets (the CI gate).
+"""
+
+from repro.analysis.verifier import (
+    ERROR,
+    FLAGGED,
+    VERIFIED,
+    Diagnostic,
+    EntryReport,
+    ProgramReport,
+    analyze_entry,
+    analyze_program,
+    analyze_source,
+    analyze_vm,
+)
+from repro.analysis.feasibility import (
+    BackendPlan,
+    bail_words,
+    plan_backend,
+    predict_branch_set,
+)
+
+__all__ = [
+    "ERROR",
+    "FLAGGED",
+    "VERIFIED",
+    "BackendPlan",
+    "Diagnostic",
+    "EntryReport",
+    "ProgramReport",
+    "analyze_entry",
+    "analyze_program",
+    "analyze_source",
+    "analyze_vm",
+    "bail_words",
+    "plan_backend",
+    "predict_branch_set",
+]

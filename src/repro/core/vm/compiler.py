@@ -35,7 +35,37 @@ from repro.core.vm.spec import (
 
 
 class CompileError(Exception):
-    pass
+    """Compilation diagnostic with source mapping.
+
+    Carries the offending token text, its character position in the frame
+    source, and the frame name — the static verifier (``repro.analysis``)
+    reuses the same shape for source-mapped verifier errors.  ``str()``
+    stays message-first so existing ``pytest.raises(match=...)`` holds.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        token: str | None = None,
+        pos: int | None = None,
+        frame: str | None = None,
+    ):
+        super().__init__(message)
+        self.message = message
+        self.token = token
+        self.pos = pos
+        self.frame = frame
+
+    def __str__(self) -> str:
+        loc = []
+        if self.token is not None:
+            loc.append(f"token {self.token!r}")
+        if self.pos is not None:
+            loc.append(f"char {self.pos}")
+        if self.frame is not None:
+            loc.append(f"frame {self.frame!r}")
+        return self.message + (f" [{', '.join(loc)}]" if loc else "")
 
 
 # Token kinds.
@@ -51,6 +81,7 @@ class Token:
     text: str
     value: object = None      # int for T_NUM, list[int] for T_ARR
     end_pos: int = 0          # char position one past the token (in-place budget)
+    pos: int = 0              # char position of the token's first character
 
 
 ALIASES = {
@@ -81,29 +112,31 @@ def tokenize(text: str) -> list[Token]:
             # Comment to matching ')' (paper comments are non-nesting).
             j = text.find(")", i + 1)
             if j < 0:
-                raise CompileError("unterminated comment")
+                raise CompileError("unterminated comment", token="(", pos=i)
             i = j + 1
             continue
         if text.startswith('."', i):
             j = text.find('"', i + 2)
             if j < 0:
-                raise CompileError("unterminated string")
+                raise CompileError("unterminated string", token='."', pos=i)
             s = text[i + 2 : j]
             if s.startswith(" "):
                 s = s[1:]
-            toks.append(Token(T_STR, s, end_pos=j + 1))
+            toks.append(Token(T_STR, s, end_pos=j + 1, pos=i))
             i = j + 1
             continue
         if text[i] == "{":
             j = text.find("}", i + 1)
             if j < 0:
-                raise CompileError("unterminated array literal")
+                raise CompileError("unterminated array literal", token="{", pos=i)
             vals = []
             for t in text[i + 1 : j].split():
                 vals.append(parse_number(t))
                 if vals[-1] is None:
-                    raise CompileError(f"bad array literal element {t!r}")
-            toks.append(Token(T_ARR, text[i : j + 1], value=vals, end_pos=j + 1))
+                    raise CompileError(
+                        f"bad array literal element {t!r}", token=t, pos=i
+                    )
+            toks.append(Token(T_ARR, text[i : j + 1], value=vals, end_pos=j + 1, pos=i))
             i = j + 1
             continue
         j = i
@@ -112,9 +145,9 @@ def tokenize(text: str) -> list[Token]:
         w = text[i:j]
         num = parse_number(w)
         if num is not None:
-            toks.append(Token(T_NUM, w, value=num, end_pos=j))
+            toks.append(Token(T_NUM, w, value=num, end_pos=j, pos=i))
         else:
-            toks.append(Token(T_WORD, w, end_pos=j))
+            toks.append(Token(T_WORD, w, end_pos=j, pos=i))
         i = j
     return toks
 
@@ -169,6 +202,8 @@ class Compiler:
         self.lst = LinearSearchTable(names)
         self.lookup_mode = lookup
         self.words_compiled = 0   # MCPS accounting (paper Tab. 9)
+        self._cur_tok: Token | None = None        # diagnostics source map
+        self._cur_frame_name: str | None = None
 
     # -- core word lookup (PHT or LST, equivalence tested) -------------------
 
@@ -187,10 +222,39 @@ class Compiler:
         cs: np.ndarray,
         frames: FrameManager,
         persistent: bool = False,
+        name: str = "",
     ) -> CodeFrame:
-        """Compile one code frame in place.  Returns the frame descriptor."""
+        """Compile one code frame in place.  Returns the frame descriptor.
+
+        Any ``CompileError`` escaping is annotated with the offending token
+        text, its char position in ``text``, and the frame name.
+        """
+        self._cur_tok = None
+        self._cur_frame_name = name or None
+        try:
+            return self._compile_frame(text, cs, frames, persistent, name)
+        except CompileError as e:
+            tok = self._cur_tok
+            if e.frame is None:
+                e.frame = self._cur_frame_name
+            if tok is not None:
+                if e.token is None:
+                    e.token = tok.text
+                if e.pos is None:
+                    e.pos = tok.pos
+            raise
+
+    def _compile_frame(
+        self,
+        text: str,
+        cs: np.ndarray,
+        frames: FrameManager,
+        persistent: bool = False,
+        name: str = "",
+    ) -> CodeFrame:
         toks = tokenize(text)
         frame = frames.allocate(max(len(text), 2))
+        self._cur_frame_name = name or f"frame{frame.fid}"
         start = frame.start
         # Faithful in-place step: the source text is written into the CS...
         for k, ch in enumerate(text):
@@ -254,6 +318,7 @@ class Compiler:
         while i + 1 < len(toks):
             i += 1
             tok = toks[i]
+            self._cur_tok = tok
             self.words_compiled += 1
 
             if tok.kind == T_NUM:

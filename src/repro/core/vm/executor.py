@@ -118,12 +118,18 @@ class BatchedSliceExecutor:
 
     backend = "batched"
 
-    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+    def __init__(
+        self,
+        cfg: VMConfig,
+        isa: ISA | None = None,
+        elide_checks: bool = False,
+    ):
         import jax
 
         self.cfg = cfg
         from repro.core.vm.interp import interp_for
-        self.interp = interp_for(cfg, isa)
+        self.elide_checks = elide_checks
+        self.interp = interp_for(cfg, isa, elide_checks)
         single = self.interp.run_slice_fn
 
         def batched(S: VMState, steps: int):
@@ -204,7 +210,8 @@ class _PallasEngine(NamedTuple):
 
 
 def _build_pallas_engine(
-    cfg: VMConfig, isa: ISA | None, mesh, interpret: bool
+    cfg: VMConfig, isa: ISA | None, mesh, interpret: bool,
+    elide_checks: bool = False,
 ) -> _PallasEngine:
     import jax
     import jax.numpy as jnp
@@ -213,7 +220,7 @@ def _build_pallas_engine(
     from repro.core.vm.interp import interp_for
     from repro.kernels.vmloop.ops import fleet_vmloop
 
-    interp = interp_for(cfg, isa)
+    interp = interp_for(cfg, isa, elide_checks)
     schedule = interp._schedule
     step_instr = interp._step_instr
 
@@ -251,7 +258,8 @@ def _build_pallas_engine(
         # un-woken never satisfy the loops' ST_RUN condition.
         S, found = jax.vmap(schedule)(S)
         S, n_exec, bailed, bail_op = fleet_vmloop(
-            S, steps, cfg, isa, mesh=mesh, interpret=interpret
+            S, steps, cfg, isa, mesh=mesh, interpret=interpret,
+            elide_checks=elide_checks,
         )
         S = jax.vmap(vmloop_rest)(S, steps - n_exec)
         S = jax.vmap(preempt)(S)
@@ -276,7 +284,8 @@ def _build_pallas_engine(
         S, found = jax.vmap(schedule_prio)(S)
         switched = (found & (S.cur != prev)).astype(jnp.int32)
         S, n_exec, bailed, bail_op = fleet_vmloop(
-            S, steps, cfg, isa, mesh=mesh, interpret=interpret
+            S, steps, cfg, isa, mesh=mesh, interpret=interpret,
+            elide_checks=elide_checks,
         )
         S = jax.vmap(vmloop_rest)(S, steps - n_exec)
         preempted = jax.vmap(
@@ -290,18 +299,26 @@ def _build_pallas_engine(
 
 
 @functools.lru_cache(maxsize=16)
-def _cached_pallas_engine(cfg: VMConfig, mesh, interpret: bool) -> _PallasEngine:
-    return _build_pallas_engine(cfg, None, mesh, interpret)
+def _cached_pallas_engine(
+    cfg: VMConfig, mesh, interpret: bool, elide_checks: bool = False
+) -> _PallasEngine:
+    return _build_pallas_engine(cfg, None, mesh, interpret, elide_checks)
 
 
 def get_pallas_engine(
-    cfg: VMConfig, isa: ISA | None = None, mesh=None, interpret: bool = True
+    cfg: VMConfig,
+    isa: ISA | None = None,
+    mesh=None,
+    interpret: bool = True,
+    elide_checks: bool = False,
 ) -> _PallasEngine:
     """Engine-selection policy mirroring ``interp_for``: cached for the
-    default ISA, fresh build for a custom one."""
+    default ISA, fresh build for a custom one.  ``elide_checks`` is part of
+    the cache key — the checked and verified-fast-path kernels are distinct
+    compiled artifacts."""
     if isa is None or isa is get_isa():
-        return _cached_pallas_engine(cfg, mesh, interpret)
-    return _build_pallas_engine(cfg, isa, mesh, interpret)
+        return _cached_pallas_engine(cfg, mesh, interpret, elide_checks)
+    return _build_pallas_engine(cfg, isa, mesh, interpret, elide_checks)
 
 
 class _PallasObsEngine(NamedTuple):
@@ -396,18 +413,20 @@ class PallasSliceExecutor:
         mesh=None,
         interpret: bool | None = None,
         obs=None,
+        elide_checks: bool = False,
     ):
         self.cfg = cfg
         self.mesh = mesh
         from repro.core.vm.interp import interp_for
         from repro.obs.metrics import normalize_obs
-        self.interp = interp_for(cfg, isa)
+        self.elide_checks = elide_checks
+        self.interp = interp_for(cfg, isa, elide_checks)
         self._isa_arg = isa
         if interpret is None:
             from repro.kernels import use_kernels
             interpret = not use_kernels()
         self.interpret = interpret
-        engine = get_pallas_engine(cfg, isa, mesh, interpret)
+        engine = get_pallas_engine(cfg, isa, mesh, interpret, elide_checks)
         self.run_slice_batched = engine.plain
         self.run_slice_batched_aux = engine.aux
         self.run_slice_exec_batched_aux = engine.exec_aux

@@ -115,18 +115,28 @@ class FleetKernels:
         mesh=None,
         executor: str = "batched",
         executive=None,
+        elide_checks: bool = False,
     ):
         self.cfg = cfg
         self.isa = isa or get_isa()
         self.mesh = mesh
         self.executor_kind = executor
         self.executive = executive     # ExecutiveConfig | None
+        # Static-verifier fast path: compile the batched/pallas slice
+        # engines without per-step stack checks.  Sound only when every
+        # program in the fleet passed repro.analysis (FleetVM's auto mode
+        # enforces that); the trace/oracle engines always keep checks.
+        self.elide_checks = bool(elide_checks)
         if executor == "pallas":
             from repro.core.vm.executor import PallasSliceExecutor
-            self.executor = PallasSliceExecutor(cfg, isa, mesh=mesh)
+            self.executor = PallasSliceExecutor(
+                cfg, isa, mesh=mesh, elide_checks=self.elide_checks
+            )
         elif executor == "batched":
             from repro.core.vm.executor import BatchedSliceExecutor
-            self.executor = BatchedSliceExecutor(cfg, isa)
+            self.executor = BatchedSliceExecutor(
+                cfg, isa, elide_checks=self.elide_checks
+            )
         elif executor == "trace":
             from repro.core.vm.trace import TraceJitExecutor
             self.executor = TraceJitExecutor(cfg, isa, mesh=mesh)
@@ -462,20 +472,29 @@ class _ObsKernels:
 
 @functools.lru_cache(maxsize=8)
 def _get_fleet_kernels(
-    cfg: VMConfig, mesh, executor: str, executive
+    cfg: VMConfig, mesh, executor: str, executive, elide_checks: bool
 ) -> FleetKernels:
-    return FleetKernels(cfg, mesh=mesh, executor=executor, executive=executive)
+    return FleetKernels(
+        cfg, mesh=mesh, executor=executor, executive=executive,
+        elide_checks=elide_checks,
+    )
 
 
 def get_fleet_kernels(
-    cfg: VMConfig, mesh=None, executor: str = "batched", executive=None
+    cfg: VMConfig,
+    mesh=None,
+    executor: str = "batched",
+    executive=None,
+    elide_checks: bool = False,
 ) -> FleetKernels:
     """Fleet kernels are expensive to trace — share per (VMConfig, mesh,
-    executor, executive).  Normalizes the optional mesh so ``f(cfg)`` and
-    ``f(cfg, None)`` hit the same cache entry (EnsembleVM and FleetVM must
-    share kernels).  ``executive`` (a frozen ``ExecutiveConfig``) keys the
-    Executive round variant like any other compiled artifact."""
-    return _get_fleet_kernels(cfg, mesh, executor, executive)
+    executor, executive, elide_checks).  Normalizes the optional mesh so
+    ``f(cfg)`` and ``f(cfg, None)`` hit the same cache entry (EnsembleVM and
+    FleetVM must share kernels).  ``executive`` (a frozen
+    ``ExecutiveConfig``) keys the Executive round variant like any other
+    compiled artifact; ``elide_checks`` keys the verified-program fast-path
+    build (a distinct kernel, so checked and elided fleets coexist)."""
+    return _get_fleet_kernels(cfg, mesh, executor, executive, bool(elide_checks))
 
 
 # ---------------------------------------------------------------------------
@@ -601,12 +620,17 @@ class FleetVM:
         isa = self.nodes[0].isa
         if any(vm.isa is not isa for vm in self.nodes):
             raise ValueError("fleet nodes must share one ISA")
-        # The cached kernels are built for the default ISA; a custom-ISA
-        # fleet needs its own build (opcode numbering differs).
-        if isa is get_isa():
-            self.kernels = get_fleet_kernels(self.cfg, mesh, executor, executive)
-        else:
-            self.kernels = FleetKernels(self.cfg, isa, mesh, executor, executive)
+        # executor="auto": the Auditor (repro.analysis) picks the engine at
+        # start()/push() time from the verified static footprint of the
+        # loaded programs; until then run the safe default with checks on.
+        self.executor_requested = executor
+        self._auto = executor == "auto"
+        self._elide = False
+        self._analysis = None          # BackendPlan | None (auto mode)
+        self._node_reports = None      # list[ProgramReport] | None
+        if self._auto:
+            executor = "batched"
+        self.kernels = self._make_kernels(executor, False)
         self.executor_kind = executor
         self._op_send = isa.opcode["send"]
         self._op_recv = isa.opcode["receive"]
@@ -882,13 +906,120 @@ class FleetVM:
         tracer = self._tracer or RoundTracer(enabled=False)
         return export_chrome_trace(tracer, path)
 
+    # -- static analysis (the Auditor) -----------------------------------------
+
+    def _make_kernels(self, executor: str, elide_checks: bool):
+        isa = self.nodes[0].isa
+        # The cached kernels are built for the default ISA; a custom-ISA
+        # fleet needs its own build (opcode numbering differs).
+        if isa is get_isa():
+            return get_fleet_kernels(
+                self.cfg, self.mesh, executor, self.executive, elide_checks
+            )
+        return FleetKernels(
+            self.cfg, isa, self.mesh, executor, self.executive, elide_checks
+        )
+
+    def _analyze_nodes(self):
+        """Run the static verifier over every node's live task entries
+        (host-side, against the states about to be stacked)."""
+        from repro.analysis.verifier import analyze_vm
+
+        return [analyze_vm(vm) for vm in self.nodes]
+
+    def _resolve_auto(self) -> None:
+        """executor="auto": verify, pick the backend, and swap kernels.
+
+        Runs at every start()/push() — exactly when host-side compiles or
+        incremental code loads land — so the backend decision always
+        reflects the program set about to execute.  Programs with verifier
+        errors are *not* rejected here (the CLI gate is the reject path);
+        they run on the always-checked batched engine.
+        """
+        from repro.analysis.feasibility import plan_backend, predict_branch_sets
+
+        reports = self._analyze_nodes()
+        branch_sets = []      # per node: the entry-trace compile key
+        aot_sets = []         # every set the engine will record (entry +
+        #                       steady-state loop re-entries, any rotation)
+        for vm, rep in zip(self.nodes, reports):
+            entry = rep.entries[0].pc if rep.entries else None
+            sets = (
+                predict_branch_sets(vm.state.cs, entry, vm.isa)
+                if entry is not None else ()
+            )
+            branch_sets.append(sets[0] if sets else None)
+            aot_sets.extend(sets)
+        plan = plan_backend(reports, branch_sets)
+        self._node_reports = reports
+        self._analysis = plan
+        if (plan.executor, plan.elide_checks) != (
+            self.executor_kind, self._elide
+        ):
+            self.kernels = self._make_kernels(plan.executor, plan.elide_checks)
+            self.executor_kind = plan.executor
+            self._elide = plan.elide_checks
+            if self.obs is not None:
+                self.kernels.executor.ensure_obs()
+            if plan.executor == "trace" and self._trace0 is None:
+                self._trace0 = self.kernels.executor.stats()
+        if plan.executor == "trace":
+            # AOT: compile each predicted branch set now, so the first
+            # slice dispatches a warm specialized trace (traces_compiled
+            # stops moving during run — the equivalence tests assert it).
+            eng = self.kernels.executor.engine
+            for bs in aot_sets:
+                eng.fn_for(bs)
+
+    def analysis_stats(self) -> dict:
+        """Auditor telemetry, schema-stable like the other stats planes.
+
+        Under ``executor="auto"`` this reflects the plan of the last
+        start()/push(); other executors analyze lazily on first call (a
+        host-side snapshot — it never touches device state).
+        """
+        from repro.analysis.feasibility import bail_words
+
+        if self._node_reports is None:
+            self._node_reports = self._analyze_nodes()
+        reports = self._node_reports
+        plan = self._analysis
+        verdicts = {"verified": 0, "flagged": 0, "error": 0}
+        for r in reports:
+            verdicts[r.verdict] += 1
+        predicted = sorted(
+            frozenset().union(*(bail_words(r) for r in reports))
+            if reports else frozenset()
+        )
+        return {
+            "executor": self.executor_kind,
+            "requested": self.executor_requested,
+            "auto": self._auto,
+            "elide_checks": self._elide,
+            "verdicts": verdicts,
+            "predicted_bail_words": predicted,
+            "wcet": [r.wcet for r in reports],
+            "aot_branch_sets": (
+                sum(1 for bs in plan.branch_sets if bs is not None)
+                if plan else 0
+            ),
+            "reasons": list(plan.reasons) if plan else [],
+            "diagnostics": [
+                str(d) for r in reports for d in r.diagnostics
+            ][:64],
+        }
+
     # -- state movement --------------------------------------------------------
 
     def start(self) -> None:
         """Stack per-node host states into the device-resident fleet state
-        (sharded over the node mesh axis when a mesh was given)."""
+        (sharded over the node mesh axis when a mesh was given).  Under
+        ``executor="auto"`` the Auditor runs first: verify the loaded
+        programs, resolve the backend, and AOT-compile predicted traces."""
         from repro.core.vm.vmstate import stack_states
 
+        if self._auto:
+            self._resolve_auto()
         stacked = stack_states([vm.state for vm in self.nodes])
         if self._sharding is not None:
             self._S = VMState(

@@ -50,6 +50,7 @@ from repro.core.vm.spec import (
     ISA,
     MEM_BASE,
     NUM_EXC,
+    STACK_EFFECTS,
     ST_DONE,
     ST_ERR,
     ST_EVENT,
@@ -72,47 +73,12 @@ I32 = jnp.int32
 # Static stack-effect table: (ds_in, ds_out, fs_in, fs_out) per word.
 # The pre-check before dispatch raises EXC_STACK — the paper's "enhanced
 # error detection" at the architecture level.
+# Declared once per Word in spec.STACK_EFFECTS; re-exported here under the
+# historical name (the oracle, the Pallas kernel's make_tables and the
+# static verifier all read the same declaration).
 # ---------------------------------------------------------------------------
 
-STACK_NEEDS: dict[str, tuple[int, int, int, int]] = {
-    "nop": (0, 0, 0, 0), "dup": (1, 2, 0, 0), "drop": (1, 0, 0, 0),
-    "swap": (2, 2, 0, 0), "over": (2, 3, 0, 0), "rot": (3, 3, 0, 0),
-    "nip": (2, 1, 0, 0), "tuck": (2, 3, 0, 0), "pick": (1, 1, 0, 0),
-    "2dup": (2, 4, 0, 0), "2drop": (2, 0, 0, 0), "depth": (0, 1, 0, 0),
-    "+": (2, 1, 0, 0), "-": (2, 1, 0, 0), "*": (2, 1, 0, 0),
-    "/": (2, 1, 0, 0), "mod": (2, 1, 0, 0), "*/": (3, 1, 0, 0),
-    "negate": (1, 1, 0, 0), "abs": (1, 1, 0, 0), "min": (2, 1, 0, 0),
-    "max": (2, 1, 0, 0), "1+": (1, 1, 0, 0), "1-": (1, 1, 0, 0),
-    "2*": (1, 1, 0, 0), "2/": (1, 1, 0, 0),
-    "=": (2, 1, 0, 0), "<>": (2, 1, 0, 0), "<": (2, 1, 0, 0),
-    ">": (2, 1, 0, 0), "<=": (2, 1, 0, 0), ">=": (2, 1, 0, 0),
-    "0=": (1, 1, 0, 0), "0<": (1, 1, 0, 0), "0>": (1, 1, 0, 0),
-    "and": (2, 1, 0, 0), "or": (2, 1, 0, 0), "xor": (2, 1, 0, 0),
-    "invert": (1, 1, 0, 0), "lshift": (2, 1, 0, 0), "rshift": (2, 1, 0, 0),
-    "@": (1, 1, 0, 0), "!": (2, 0, 0, 0), "+!": (2, 0, 0, 0),
-    "get": (2, 1, 0, 0), "put": (3, 0, 0, 0), "push": (2, 0, 0, 0),
-    "pop": (1, 1, 0, 0), "fill": (2, 0, 0, 0), "len": (1, 1, 0, 0),
-    "branch": (0, 0, 0, 0), "0branch": (1, 0, 0, 0), "ret": (0, 0, 0, 0),
-    "exit": (0, 0, 0, 0), "exec": (1, 0, 0, 0),
-    "doinit": (2, 0, 0, 2), "doloop": (0, 0, 2, 2), "i": (0, 1, 1, 1),
-    "j": (0, 1, 3, 3), "unloop": (0, 0, 2, 0),
-    "halt": (0, 0, 0, 0), "end": (0, 0, 0, 0),
-    "dlit": (0, 1, 0, 0),
-    ".": (1, 0, 0, 0), "emit": (1, 0, 0, 0), "cr": (0, 0, 0, 0),
-    "prstr": (0, 0, 0, 0), "vecprint": (1, 0, 0, 0),
-    "out": (1, 0, 0, 0), "in": (0, 1, 0, 0), "send": (2, 0, 0, 0),
-    "receive": (0, 2, 0, 0),
-    "yield": (0, 0, 0, 0), "sleep": (1, 0, 0, 0), "await": (3, 0, 0, 0),
-    "task": (3, 1, 0, 0), "taskid": (0, 1, 0, 0), "ms": (0, 1, 0, 0),
-    "steps": (0, 1, 0, 0),
-    "exception": (2, 0, 0, 0), "catch": (0, 1, 0, 0), "throw": (1, 0, 0, 0),
-    "sin": (1, 1, 0, 0), "log": (1, 1, 0, 0), "sigmoid": (1, 1, 0, 0),
-    "relu": (1, 1, 0, 0), "sqrt": (1, 1, 0, 0), "rnd": (1, 1, 0, 0),
-    "vecload": (3, 0, 0, 0), "vecscale": (3, 0, 0, 0), "vecadd": (4, 0, 0, 0),
-    "vecmul": (4, 0, 0, 0), "vecfold": (4, 0, 0, 0), "vecmap": (4, 0, 0, 0),
-    "dotprod": (2, 1, 0, 0), "vecmax": (1, 1, 0, 0),
-    "hull": (4, 0, 0, 0), "lowp": (4, 0, 0, 0), "highp": (4, 0, 0, 0),
-}
+STACK_NEEDS: dict[str, tuple[int, int, int, int]] = dict(STACK_EFFECTS)
 
 
 def _truncdiv(a, b):
@@ -173,9 +139,19 @@ def _muldiv(a, b, c):
 class Interpreter:
     """Builds jitted vmloop/schedule for one (ISA, VMConfig) pair."""
 
-    def __init__(self, cfg: VMConfig, isa: ISA | None = None):
+    def __init__(
+        self, cfg: VMConfig, isa: ISA | None = None, elide_checks: bool = False
+    ):
         self.cfg = cfg
         self.isa = isa or get_isa()
+        # ``elide_checks=True`` drops the per-step stack pre-check (the
+        # LUT-driven under/overflow test before dispatch and the TAG_LIT
+        # push-overflow test) at build time.  Only sound for programs the
+        # static verifier (repro.analysis) proved EXC_STACK-free: every
+        # body-internal check (pick bounds, ret/call RS checks, div-by-zero,
+        # address bounds) stays, so behaviour is byte-identical on verified
+        # programs and undefined only where the verifier already rejected.
+        self.elide_checks = bool(elide_checks)
         self._build()
         self.vmloop = jax.jit(self._vmloop, static_argnames=("steps",))
         self.schedule = jax.jit(self._schedule)
@@ -888,8 +864,13 @@ class Interpreter:
         NEEDS_FIN = jnp.array(needs_fin, I32)
         NEEDS_FOUT = jnp.array(needs_fout, I32)
 
+        ELIDE = self.elide_checks
+
         def exec_op(st, opcode):
             code = jnp.clip(opcode, 0, num_ops).astype(I32)
+            if ELIDE:
+                # Verified program: the stack pre-check is statically dead.
+                return lax.switch(code, branches, st)
             t = st.cur
             din = NEEDS_DIN[code]
             dout = NEEDS_DOUT[code]
@@ -947,6 +928,8 @@ class Interpreter:
 
             def case_lit(s):
                 s = set_pc(s, pc + 1)
+                if ELIDE:
+                    return dpush(s, payload)
                 over = s.dsp[t] >= DS
                 return lax.cond(
                     over, lambda x: raise_exc(x, EXC_STACK), lambda x: dpush(x, payload), s
@@ -1003,6 +986,8 @@ class Interpreter:
                 def step(st, instr):
                     t = st.cur
                     st = set_pc(st, st.pc[t] + 1)
+                    if ELIDE:
+                        return finish_instr(body(st))
                     under = (st.dsp[t] < din) | (st.fsp[t] < fin)
                     over = (st.dsp[t] - din + dout > DS) | (
                         st.fsp[t] - fin + fout > FS
@@ -1018,6 +1003,8 @@ class Interpreter:
                     t = st.cur
                     payload = (instr >> 2).astype(I32)
                     st = set_pc(st, st.pc[t] + 1)
+                    if ELIDE:
+                        return finish_instr(dpush(st, payload))
                     over = st.dsp[t] >= DS
                     st = lax.cond(
                         over,
@@ -1216,16 +1203,18 @@ class Interpreter:
 
 
 @functools.lru_cache(maxsize=8)
-def get_interpreter(cfg: VMConfig) -> Interpreter:
+def get_interpreter(cfg: VMConfig, elide_checks: bool = False) -> Interpreter:
     """Interpreters are expensive to trace/compile — share per VMConfig
     (the default ISA is a process-wide singleton)."""
-    return Interpreter(cfg)
+    return Interpreter(cfg, elide_checks=elide_checks)
 
 
-def interp_for(cfg: VMConfig, isa: ISA | None = None) -> Interpreter:
+def interp_for(
+    cfg: VMConfig, isa: ISA | None = None, elide_checks: bool = False
+) -> Interpreter:
     """Shared interpreter-selection policy: the per-config cache for the
     default ISA, a fresh build for a custom one.  Used by every executor
     frontend (JitExecutor, FleetKernels) so they cannot diverge."""
     if isa is None or isa is get_isa():
-        return get_interpreter(cfg)
-    return Interpreter(cfg, isa)
+        return get_interpreter(cfg, elide_checks)
+    return Interpreter(cfg, isa, elide_checks=elide_checks)

@@ -18,7 +18,7 @@ Bytecode format (paper Def. 4, adapted to 32-bit cells — see DESIGN.md):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -83,6 +83,22 @@ class Word:
     doc: str = ""
     category: str = "core"
     compile_only: bool = False  # handled by the compiler, no runtime opcode
+    # Declared machine-readable stack effect (ds_in, ds_out, fs_in, fs_out):
+    # cells popped/pushed on the data stack and frames consumed/produced on
+    # the FOR stack.  This is the single source of truth for the runtime
+    # stack pre-check (interpreter, oracle, Pallas kernel operand tables)
+    # and for the static verifier (repro.analysis).  Back-filled from
+    # STACK_EFFECTS below for every runtime word; ``None`` only for
+    # compile-only words, which never reach the decoder.
+    stack: tuple[int, int, int, int] | None = None
+
+    @property
+    def pops(self) -> int:
+        return self.stack[0] if self.stack else 0
+
+    @property
+    def pushes(self) -> int:
+        return self.stack[1] if self.stack else 0
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +219,71 @@ WORDS: list[Word] = [
     Word("lowp", "( arr off len k -- )", "in-place IIR low-pass, k = pole scale/1000", "vec"),
     Word("highp", "( arr off len k -- )", "in-place IIR high-pass", "vec"),
 ]
+
+# ---------------------------------------------------------------------------
+# Declared stack effects: (ds_in, ds_out, fs_in, fs_out) per runtime word.
+# Ground truth for the decoder pre-check (EXC_STACK — the paper's "enhanced
+# error detection" at the architecture level) and for the static verifier.
+# The interpreter, the Python oracle and the Pallas kernel's operand tables
+# all derive from this one table (see interp.STACK_NEEDS / ref.make_tables).
+# ---------------------------------------------------------------------------
+
+STACK_EFFECTS: dict[str, tuple[int, int, int, int]] = {
+    "nop": (0, 0, 0, 0), "dup": (1, 2, 0, 0), "drop": (1, 0, 0, 0),
+    "swap": (2, 2, 0, 0), "over": (2, 3, 0, 0), "rot": (3, 3, 0, 0),
+    "nip": (2, 1, 0, 0), "tuck": (2, 3, 0, 0), "pick": (1, 1, 0, 0),
+    "2dup": (2, 4, 0, 0), "2drop": (2, 0, 0, 0), "depth": (0, 1, 0, 0),
+    "+": (2, 1, 0, 0), "-": (2, 1, 0, 0), "*": (2, 1, 0, 0),
+    "/": (2, 1, 0, 0), "mod": (2, 1, 0, 0), "*/": (3, 1, 0, 0),
+    "negate": (1, 1, 0, 0), "abs": (1, 1, 0, 0), "min": (2, 1, 0, 0),
+    "max": (2, 1, 0, 0), "1+": (1, 1, 0, 0), "1-": (1, 1, 0, 0),
+    "2*": (1, 1, 0, 0), "2/": (1, 1, 0, 0),
+    "=": (2, 1, 0, 0), "<>": (2, 1, 0, 0), "<": (2, 1, 0, 0),
+    ">": (2, 1, 0, 0), "<=": (2, 1, 0, 0), ">=": (2, 1, 0, 0),
+    "0=": (1, 1, 0, 0), "0<": (1, 1, 0, 0), "0>": (1, 1, 0, 0),
+    "and": (2, 1, 0, 0), "or": (2, 1, 0, 0), "xor": (2, 1, 0, 0),
+    "invert": (1, 1, 0, 0), "lshift": (2, 1, 0, 0), "rshift": (2, 1, 0, 0),
+    "@": (1, 1, 0, 0), "!": (2, 0, 0, 0), "+!": (2, 0, 0, 0),
+    "get": (2, 1, 0, 0), "put": (3, 0, 0, 0), "push": (2, 0, 0, 0),
+    "pop": (1, 1, 0, 0), "fill": (2, 0, 0, 0), "len": (1, 1, 0, 0),
+    "branch": (0, 0, 0, 0), "0branch": (1, 0, 0, 0), "ret": (0, 0, 0, 0),
+    "exit": (0, 0, 0, 0), "exec": (1, 0, 0, 0),
+    "doinit": (2, 0, 0, 2), "doloop": (0, 0, 2, 2), "i": (0, 1, 1, 1),
+    "j": (0, 1, 3, 3), "unloop": (0, 0, 2, 0),
+    "halt": (0, 0, 0, 0), "end": (0, 0, 0, 0),
+    "dlit": (0, 1, 0, 0),
+    ".": (1, 0, 0, 0), "emit": (1, 0, 0, 0), "cr": (0, 0, 0, 0),
+    "prstr": (0, 0, 0, 0), "vecprint": (1, 0, 0, 0),
+    "out": (1, 0, 0, 0), "in": (0, 1, 0, 0), "send": (2, 0, 0, 0),
+    "receive": (0, 2, 0, 0),
+    "yield": (0, 0, 0, 0), "sleep": (1, 0, 0, 0), "await": (3, 0, 0, 0),
+    "task": (3, 1, 0, 0), "taskid": (0, 1, 0, 0), "ms": (0, 1, 0, 0),
+    "steps": (0, 1, 0, 0),
+    "exception": (2, 0, 0, 0), "catch": (0, 1, 0, 0), "throw": (1, 0, 0, 0),
+    "sin": (1, 1, 0, 0), "log": (1, 1, 0, 0), "sigmoid": (1, 1, 0, 0),
+    "relu": (1, 1, 0, 0), "sqrt": (1, 1, 0, 0), "rnd": (1, 1, 0, 0),
+    "vecload": (3, 0, 0, 0), "vecscale": (3, 0, 0, 0), "vecadd": (4, 0, 0, 0),
+    "vecmul": (4, 0, 0, 0), "vecfold": (4, 0, 0, 0), "vecmap": (4, 0, 0, 0),
+    "dotprod": (2, 1, 0, 0), "vecmax": (1, 1, 0, 0),
+    "hull": (4, 0, 0, 0), "lowp": (4, 0, 0, 0), "highp": (4, 0, 0, 0),
+}
+
+if set(STACK_EFFECTS) != {w.name for w in WORDS}:
+    _missing = {w.name for w in WORDS} - set(STACK_EFFECTS)
+    _extra = set(STACK_EFFECTS) - {w.name for w in WORDS}
+    raise RuntimeError(
+        f"STACK_EFFECTS out of sync with WORDS: missing={_missing} extra={_extra}"
+    )
+
+# Back-fill the declared effect onto every runtime Word (opcode numbering
+# is positional, so the rebuilt list preserves it exactly).
+WORDS = [replace(w, stack=STACK_EFFECTS[w.name]) for w in WORDS]
+
+
+def fios_stack_effect(args: int, ret: int) -> tuple[int, int, int, int]:
+    """Declared effect of a FIOS/SVC opcode: pops ``args`` cells, pushes
+    ``ret`` (0 or 1) on resume, no FOR-stack traffic (see exec.syscalls)."""
+    return (int(args), int(ret), 0, 0)
 
 # Compile-only words (consumed by the compiler; no opcode).
 COMPILE_WORDS = [

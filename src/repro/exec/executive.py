@@ -120,6 +120,14 @@ class Executive:
         entry address.  ``deadline`` is an absolute virtual-clock ms bound
         (0 = none); ``duration_ms`` the declared run-time estimate and
         ``e_cost`` the declared energy draw (LSA Job fields).
+
+        When the caller declares no ``duration_ms`` but sets a deadline,
+        the static verifier's WCET bound (``repro.analysis``) stands in:
+        ``ceil(wcet_instructions * cfg.us_per_instr / 1000)`` virtual ms —
+        a program whose *worst case* cannot meet its deadline is rejected
+        before it runs.  Statically unbounded programs (unbounded loops,
+        recursion) keep ``duration_ms = 0``: admission stays deadline-only
+        and the run-time deadline monitor covers them, quantum by quantum.
         """
         vm = self.nodes[node]
         live = getattr(self.fleet, "_S", None) is not None
@@ -134,12 +142,13 @@ class Executive:
         slot = task if task is not None else self._free_slot(st)
         if slot < 0 or int(st.tstatus[slot]) != ST_FREE:
             return self._reject(node, prio, deadline, "no-slot")
+        entry = prog if isinstance(prog, int) else vm.load(prog).entry
+        if duration_ms == 0 and deadline > 0:
+            duration_ms = self._wcet_ms(vm, entry)
         if deadline > 0 and now + duration_ms > deadline:
             return self._reject(node, prio, deadline, "infeasible")
         if not energy.drain(e_cost):
             return self._reject(node, prio, deadline, "no-energy")
-
-        entry = prog if isinstance(prog, int) else vm.load(prog).entry
         vm.state = vms.launch_task(vm.state, slot, entry, prio, deadline)
         self.log.append(Admission(node, slot, prio, deadline, True, "ok"))
         if hasattr(self.fleet, "_spawns_admitted"):
@@ -147,6 +156,19 @@ class Executive:
         if live:
             self.fleet.push()
         return slot
+
+    def _wcet_ms(self, vm, entry: int) -> int:
+        """WCET-backed default duration: the verifier's instruction bound
+        scaled by the node's calibrated virtual-clock rate; 0 (no bound)
+        when the program is statically unbounded or fails to analyze."""
+        import math
+
+        from repro.analysis.verifier import analyze_vm
+
+        rep = analyze_vm(vm, entries=[(entry, 0, 0, 0, 0)])
+        if rep.wcet is None:
+            return 0
+        return int(math.ceil(rep.wcet * vm.cfg.us_per_instr / 1000))
 
     def _reject(self, node: int, prio: int, deadline: int, reason: str) -> int:
         self.log.append(Admission(node, -1, prio, deadline, False, reason))

@@ -31,7 +31,13 @@ tail or the host.
 Pick ``executor="pallas"`` for fleets dominated by the claimed set —
 compute, messaging, DSP/ANN vector work (the paper's hardware-role
 workloads); pick ``"batched"`` for task-spawn/``rnd``/FIOS-heavy mixes,
-or ``"trace"`` for hot program-homogeneous fleets.
+or ``"trace"`` for hot program-homogeneous fleets.  Or let the Auditor
+decide: the claimed/declined split above is consumed *statically* by
+``repro.analysis`` — ``FleetVM(executor="auto")`` intersects each
+program's opcode footprint with ``BAILOUT_WORDS`` at ``start()`` and
+routes the fleet accordingly (bail-free -> pallas, predictable bails ->
+trace, otherwise batched), eliding the per-step stack pre-check when
+every program verified.
 
 Selected as a fleet backend via ``FleetVM(executor="pallas")`` /
 ``REXAVM(backend="pallas")``.

@@ -44,6 +44,7 @@ def fleet_vmloop(
     mesh=None,
     interpret: bool = False,
     obs: bool = False,
+    elide_checks: bool = False,
 ):
     """Advance every node of a stacked fleet state by at most ``steps``
     in-kernel instructions (bailing per node on unclaimed opcodes).
@@ -66,7 +67,8 @@ def fleet_vmloop(
             ax = mesh.axis_names[0]
             sharded = shard_map(
                 lambda c: vmloop_call(
-                    c, steps, cfg, isa, interpret=interpret, obs=obs
+                    c, steps, cfg, isa, interpret=interpret, obs=obs,
+                    elide_checks=elide_checks,
                 ),
                 mesh=mesh,
                 in_specs=(P(ax),),
@@ -75,7 +77,10 @@ def fleet_vmloop(
             )
             core, *rest = sharded(core)
             return (merge_core(S, core), *rest)
-    core, *rest = vmloop_call(core, steps, cfg, isa, interpret=interpret, obs=obs)
+    core, *rest = vmloop_call(
+        core, steps, cfg, isa, interpret=interpret, obs=obs,
+        elide_checks=elide_checks,
+    )
     return (merge_core(S, core), *rest)
 
 

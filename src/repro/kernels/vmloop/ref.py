@@ -298,7 +298,9 @@ def _fpsin_t(x, tb: Tables):
 
 # --- the step function (mirrors interp.step_instr over CoreState) ------------
 
-def make_core_step(cfg: VMConfig, isa: ISA | None = None):
+def make_core_step(
+    cfg: VMConfig, isa: ISA | None = None, elide_checks: bool = False
+):
     """Returns ``(step_instr, instr_supported)`` over :class:`CoreState`.
 
     ``step_instr`` is a transliteration of
@@ -308,6 +310,12 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
     ``instr_supported`` is the bail predicate, evaluated on the *fetched*
     instruction before any state is touched.  Branches take ``(st, tb)``;
     the DSP words gather from the LUT operands in ``tb``.
+
+    ``elide_checks=True`` drops the LUT-driven stack pre-check and the
+    TAG_LIT push-overflow check at build time (the flag is static, so the
+    check computation vanishes from the kernel, not just its outcome) —
+    only sound for programs the static verifier proved EXC_STACK-free,
+    mirroring ``interp.Interpreter(elide_checks=True)``.
     """
     isa = isa or get_isa()
     CS, MEM = cfg.cs_size, cfg.mem_size
@@ -978,6 +986,9 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
 
     def exec_op(st, opcode, tb: Tables):
         code = jnp.clip(opcode, 0, num_ops).astype(I32)
+        if elide_checks:
+            # Verified program: the stack pre-check is statically dead.
+            return lax.switch(code, branches, st, tb)
         t = st.cur
         din = tb.din[code]
         dout = tb.dout[code]
@@ -1005,6 +1016,8 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
 
         def case_lit(s):
             s = set_pc(s, pc + 1)
+            if elide_checks:
+                return dpush(s, payload)
             over = s.dsp[t] >= DS
             return lax.cond(
                 over, lambda x: raise_exc(x, EXC_STACK), lambda x: dpush(x, payload), s
@@ -1079,7 +1092,12 @@ def make_core_step(cfg: VMConfig, isa: ISA | None = None):
     return step_instr, instr_supported
 
 
-def make_run_core(cfg: VMConfig, isa: ISA | None = None, obs: bool = False):
+def make_run_core(
+    cfg: VMConfig,
+    isa: ISA | None = None,
+    obs: bool = False,
+    elide_checks: bool = False,
+):
     """Returns ``run_core(core, tables, steps) -> (core, n_exec, bailed,
     bail_op)``: the fetch/dispatch/execute loop of Alg. 1, restricted to the
     claimed opcode set.  Stops on slice exhaustion, a status change
@@ -1098,7 +1116,7 @@ def make_run_core(cfg: VMConfig, isa: ISA | None = None, obs: bool = False):
     isa = isa or get_isa()
     CS = cfg.cs_size
     num_ops = isa.num_ops
-    step_instr, instr_supported = make_core_step(cfg, isa)
+    step_instr, instr_supported = make_core_step(cfg, isa, elide_checks)
 
     def bin_of(s: CoreState):
         t = s.cur

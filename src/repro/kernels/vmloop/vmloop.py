@@ -69,6 +69,7 @@ def vmloop_call(
     *,
     interpret: bool = False,
     obs: bool = False,
+    elide_checks: bool = False,
 ):
     """Run the on-chip vmloop over a stacked (node-leading) ``CoreState``.
 
@@ -84,10 +85,15 @@ def vmloop_call(
     (N, num_ops + 4) int32``.  This is a distinct kernel (extra output
     block, extra carry in the while loop) — the default path is unchanged
     and pays zero extra device outputs.
+
+    ``elide_checks=True`` compiles the verified-program fast path: the
+    per-step stack pre-check disappears from the kernel body at build time
+    (see ``ref.make_core_step``) — sound only when every program in the
+    fleet passed the static verifier.
     """
     isa = isa or get_isa()
     N = core.pc.shape[0]
-    run_core = make_run_core(cfg, isa, obs=obs)
+    run_core = make_run_core(cfg, isa, obs=obs, elide_checks=elide_checks)
     nbins = isa.num_ops + 4
     # Constant dispatch + LUT tables ride along as (1, L_t) operands
     # replicated to every grid program (a kernel cannot capture array
